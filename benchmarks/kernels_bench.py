@@ -1,0 +1,60 @@
+"""Kernel-layer benchmarks.
+
+On this CPU container the Pallas kernels execute under interpret mode
+(semantics checks, not speed), so wall-clock numbers here time the XLA
+CPU lowering of the *reference* formulations — the throughput signal is
+the derived FLOP/byte counts used by the §Roofline closure analysis.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (random_hypergraph, distinct_thresholds,
+                        maxmin_closure, threshold_closure_mr, maxmin_matmul)
+from repro.kernels import ref
+
+__all__ = ["closure_bench"]
+
+
+def _t(fn, reps=3):
+    fn()                                 # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def closure_bench(m: int = 512) -> List[Tuple[str, float, str]]:
+    h = random_hypergraph(m // 2, m, min_size=2, max_size=6, seed=0)
+    w = jnp.asarray(h.line_graph(np.int32).astype(np.float32))
+    mm = w.shape[0]
+    rounds = int(np.ceil(np.log2(mm)))
+    thr = distinct_thresholds(np.asarray(w))
+    s = thr.size
+    rows = []
+
+    f1 = jax.jit(lambda x: maxmin_closure(x, max_rounds=rounds))
+    t1 = _t(lambda: f1(w))
+    # maxmin closure: rounds × m³ compare+select ops (VPU work, 2 ops/elem)
+    ops1 = rounds * 2 * mm ** 3
+    rows.append((f"kernel.maxmin-closure.m{mm}", t1 * 1e6, "us-per-call"))
+    rows.append((f"kernel.maxmin-closure.m{mm}.Gop", ops1 / 1e9, "Gops"))
+
+    f2 = jax.jit(lambda x: threshold_closure_mr(x, thr, rounds=rounds))
+    t2 = _t(lambda: f2(w))
+    # threshold closure: rounds × S × 2m³ MAC (MXU work)
+    ops2 = rounds * s * 2 * mm ** 3
+    rows.append((f"kernel.threshold-closure.m{mm}.S{s}", t2 * 1e6,
+                 "us-per-call"))
+    rows.append((f"kernel.threshold-closure.m{mm}.Gop", ops2 / 1e9, "Gops"))
+
+    # the single (max,min) matmul building block
+    f3 = jax.jit(lambda x: maxmin_matmul(x, x))
+    t3 = _t(lambda: f3(w))
+    rows.append((f"kernel.maxmin-matmul.m{mm}", t3 * 1e6, "us-per-call"))
+    return rows

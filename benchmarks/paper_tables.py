@@ -1,0 +1,166 @@
+"""One benchmark per paper table/figure.
+
+Exp-1 (Fig. 2): total MR query time — Base, Base*, ETE-reach, VTE-reach,
+               Min-reach, TCI (HypED-analog), JAX-batched, kernel join.
+Exp-2 (Tab. IV time): indexing time — Construct-Base / Construct /
+               Construct* (+ the exact-necessity variant).
+Exp-3 (Tab. IV space): |H|, |L|, |L*|, full adjacency N, peak
+               neighbor-index M̂.
+Exp-4 (Fig. 3): scalability — 20..100% hyperedge subsets.
+Exp-5 (Fig. 4): epidemic case study on a co-location hypergraph.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (Hypergraph, from_edge_lists, mr_online,
+                        precompute_neighbors, build_basic, build_fast,
+                        minimize, exact_minimize, mr_query, PaddedIndex,
+                        build_ete, ThresholdComponentIndex, MSTOracle,
+                        mr_oracle_dense)
+from .datasets import BENCH_DATASETS, make_dataset
+
+__all__ = ["exp1_query_time", "exp2_indexing_time", "exp3_space",
+           "exp4_scalability", "exp5_case_study"]
+
+
+def _timeit(fn: Callable, *, reps: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _query_pairs(h: Hypergraph, k: int = 1000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, h.n, k), rng.integers(0, h.n, k)
+
+
+def exp1_query_time(dataset: str = "BK-s", n_q: int = 1000,
+                    include_online: bool = True) -> List[Tuple[str, float, str]]:
+    """Total time for n_q MR queries per method (paper Fig. 2)."""
+    h = make_dataset(dataset)
+    us, vs = _query_pairs(h, n_q)
+    rows = []
+
+    idx = build_fast(h)
+    mn = minimize(idx)
+    ete = build_ete(h)
+    tci = ThresholdComponentIndex(h)
+    nc = precompute_neighbors(h)
+
+    if include_online:
+        sub = min(n_q, 50)              # online is orders slower; extrapolate
+        t = _timeit(lambda: [mr_online(h, int(u), int(v))
+                             for u, v in zip(us[:sub], vs[:sub])])
+        rows.append((f"exp1.{dataset}.Base", t / sub * 1e6, "per-query-us"))
+        t = _timeit(lambda: [mr_online(h, int(u), int(v), nc)
+                             for u, v in zip(us[:sub], vs[:sub])])
+        rows.append((f"exp1.{dataset}.Base*", t / sub * 1e6, "per-query-us"))
+
+    t = _timeit(lambda: [ete.mr(int(u), int(v)) for u, v in zip(us, vs)])
+    rows.append((f"exp1.{dataset}.ETE-reach", t / n_q * 1e6, "per-query-us"))
+    t = _timeit(lambda: [tci.mr(int(u), int(v)) for u, v in zip(us, vs)])
+    rows.append((f"exp1.{dataset}.TCI(HypED-like)", t / n_q * 1e6, "per-query-us"))
+    t = _timeit(lambda: [mr_query(idx, int(u), int(v))
+                         for u, v in zip(us, vs)])
+    rows.append((f"exp1.{dataset}.VTE-reach", t / n_q * 1e6, "per-query-us"))
+    t = _timeit(lambda: [mr_query(mn, int(u), int(v))
+                         for u, v in zip(us, vs)])
+    rows.append((f"exp1.{dataset}.Min-reach", t / n_q * 1e6, "per-query-us"))
+
+    pidx = PaddedIndex(mn)
+    import jax
+    f = jax.jit(lambda u, v: pidx.mr(u, v))
+    _ = np.asarray(f(us, vs))           # compile
+    t = _timeit(lambda: np.asarray(f(us, vs)), reps=5)
+    rows.append((f"exp1.{dataset}.Min-batched-jax", t / n_q * 1e6,
+                 "per-query-us"))
+
+    # index-free sparse frontier engine (for graphs beyond dense scale)
+    from repro.core.frontier import SparseLineGraph, batched_mr
+    g = SparseLineGraph(h)
+    sub = min(n_q, 100)
+    _ = batched_mr(g, us[:4], vs[:4], rounds=min(h.m, 64))   # compile
+    t = _timeit(lambda: batched_mr(g, us[:sub], vs[:sub],
+                                   rounds=min(h.m, 64)))
+    rows.append((f"exp1.{dataset}.Sparse-frontier", t / sub * 1e6,
+                 "per-query-us"))
+    return rows
+
+
+def exp2_indexing_time(dataset: str = "NC-s",
+                       include_basic: bool = True) -> List[Tuple[str, float, str]]:
+    h = make_dataset(dataset)
+    rows = []
+    if include_basic:
+        t = _timeit(lambda: build_basic(h))
+        rows.append((f"exp2.{dataset}.Construct-Base", t * 1e6, "total-us"))
+    t = _timeit(lambda: build_fast(h))
+    rows.append((f"exp2.{dataset}.Construct", t * 1e6, "total-us"))
+    idx = build_fast(h)
+    t2 = _timeit(lambda: minimize(idx))
+    rows.append((f"exp2.{dataset}.Construct*", (t + t2) * 1e6, "total-us"))
+    t3 = _timeit(lambda: exact_minimize(idx))
+    rows.append((f"exp2.{dataset}.Construct-exactmin", (t + t3) * 1e6,
+                 "total-us"))
+    return rows
+
+
+def exp3_space(dataset: str = "BK-s") -> List[Tuple[str, float, str]]:
+    h = make_dataset(dataset)
+    idx = build_fast(h)
+    mn = minimize(idx)
+    nc = precompute_neighbors(h)
+    rows = [
+        (f"exp3.{dataset}.H-bytes", h.e_idx.nbytes + h.v_idx.nbytes, "bytes"),
+        (f"exp3.{dataset}.L-bytes", idx.nbytes(), "bytes"),
+        (f"exp3.{dataset}.Lmin-bytes", mn.nbytes(), "bytes"),
+        (f"exp3.{dataset}.N-adjacency-bytes", nc.nbytes(), "bytes"),
+        (f"exp3.{dataset}.M-peak-bytes",
+         idx.stats.get("m_peak_entries", 0) * 12, "bytes"),
+        (f"exp3.{dataset}.labels", idx.num_labels, "count"),
+        (f"exp3.{dataset}.labels-min", mn.num_labels, "count"),
+    ]
+    return rows
+
+
+def exp4_scalability(dataset: str = "WA-s") -> List[Tuple[str, float, str]]:
+    h = make_dataset(dataset)
+    rng = np.random.default_rng(0)
+    rows = []
+    for frac in (0.2, 0.4, 0.6, 0.8, 1.0):
+        k = max(int(h.m * frac), 1)
+        keep = rng.choice(h.m, size=k, replace=False)
+        sub = from_edge_lists([h.edge(int(e)) for e in keep], n=h.n)
+        t = _timeit(lambda: build_fast(sub))
+        idx = build_fast(sub)
+        t2 = _timeit(lambda: minimize(idx))
+        rows.append((f"exp4.{dataset}.{int(frac*100)}pct.construct",
+                     t * 1e6, "total-us"))
+        rows.append((f"exp4.{dataset}.{int(frac*100)}pct.construct*",
+                     (t + t2) * 1e6, "total-us"))
+        rows.append((f"exp4.{dataset}.{int(frac*100)}pct.index-labels",
+                     idx.num_labels, "count"))
+    return rows
+
+
+def exp5_case_study() -> List[Tuple[str, float, str]]:
+    h = make_dataset("COLO")
+    idx = minimize(build_fast(h))
+    pidx = PaddedIndex(idx)
+    patient_zero = int(np.argmax(h.vertex_degrees))
+    others = np.arange(h.n)
+    risk = np.asarray(pidx.mr(np.full(h.n, patient_zero), others))
+    rows = [
+        ("exp5.colo.n-people", h.n, "count"),
+        ("exp5.colo.n-groups", h.m, "count"),
+        ("exp5.colo.max-risk", int(risk[others != patient_zero].max()
+                                   if h.n > 1 else 0), "MR"),
+        ("exp5.colo.at-risk>=2", int((risk >= 2).sum()), "count"),
+        ("exp5.colo.at-risk>=3", int((risk >= 3).sum()), "count"),
+    ]
+    return rows

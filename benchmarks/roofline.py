@@ -1,0 +1,174 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) cell.
+
+    compute term    = FLOPs_executed / (chips × 197e12 bf16 FLOP/s)
+    memory term     = HBM_bytes      / (chips × 819e9 B/s)
+    collective term = coll_bytes_per_device / 50e9 B/s/link
+
+FLOPs and HBM bytes are *analytic* (formulas below, per executed step,
+global): XLA's cost_analysis counts scan bodies once (verified — see
+EXPERIMENTS.md §Dry-run), so compiled counters undercount by the
+microbatch × layer trip product; the collective term is *measured* from
+the compiled HLO with loop-aware trip multiplication
+(repro.launch.hlo_analysis), i.e. the one number that needs the dry-run.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); the ratio
+MODEL_FLOPS / FLOPs_executed exposes remat/redundancy waste (≈0.75 with
+full remat: fwd+bwd+re-fwd = 8·N·D).
+
+roofline_fraction = [MODEL_FLOPS/(chips·peak)] / max(terms): the MFU
+upper bound the compiled program permits — the score §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config, ALIASES
+from repro.launch.shapes import SHAPES
+from repro.models.common import ArchConfig
+
+__all__ = ["analytic_cell_model", "roofline_row", "roofline_table",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW", "CHIPS"]
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / ICI link
+
+
+def _attn_flops_fwd(cfg: ArchConfig, b: int, s: int) -> float:
+    """Self-attention score+value contractions, causal (×1/2)."""
+    if cfg.family == "ssm":
+        # selective scan: ~6 flops per (token, d_inner, d_state) + conv
+        return b * s * cfg.d_inner * cfg.ssm_state * 6.0 * cfg.n_layers
+    w = min(cfg.window, s) if cfg.window else s
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if pat[i % len(pat)] == "attn")
+        n_rec = cfg.n_layers - n_attn
+        attn = 4 * n_attn * b * s * w * cfg.n_heads * cfg.hd * 0.5
+        rec = n_rec * b * s * cfg.drnn * 12.0       # gates + scan
+        return attn + rec
+    layers = cfg.n_layers + (cfg.enc_layers if cfg.family == "encdec" else 0)
+    causal = 0.5 if cfg.family != "encdec" else 0.75   # enc is bidirectional
+    return 4 * layers * b * s * w * cfg.n_heads * cfg.hd * causal
+
+
+def analytic_cell_model(cfg: ArchConfig, shape) -> Dict[str, float]:
+    """Per executed step, global (all chips)."""
+    n_act = cfg.n_active_params()
+    n_emb_in = cfg.vocab * cfg.d_model        # input embedding (gather, ~0 flop)
+    n_mat = max(n_act - n_emb_in, 1)          # matmul-visible params
+    b, s = shape.global_batch, shape.seq_len
+    kv_bytes_tok = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2
+                    if cfg.family not in ("ssm", "hybrid") else
+                    4 * cfg.d_inner * (cfg.ssm_state + cfg.d_conv)
+                    if cfg.family == "ssm" else 4 * cfg.drnn * 8)
+
+    if shape.kind == "train":
+        t = b * s
+        fwd = 2 * n_mat * t + _attn_flops_fwd(cfg, b, s)
+        factor = 4.0 if cfg.remat else 3.0     # fwd+bwd(2x)+refwd(1x)
+        flops = factor * fwd
+        model_flops = 6.0 * n_mat * t
+        # HBM: weights re-read per pass per microbatch (bf16) + optimizer
+        # f32 m/v read+write + activation boundary traffic
+        p_bytes = cfg.n_params() * 2
+        passes = 3 * cfg.microbatch
+        act = 12 * t * cfg.d_model * cfg.n_layers * 2
+        hbm = passes * p_bytes + 16 * cfg.n_params() + act
+    elif shape.kind == "prefill":
+        t = b * s
+        flops = 2 * n_mat * t + _attn_flops_fwd(cfg, b, s)
+        model_flops = 2.0 * n_mat * t
+        hbm = cfg.n_params() * 2 + 10 * t * cfg.d_model * cfg.n_layers * 2
+    else:  # decode: one token against an s-long cache
+        w = min(cfg.window, s) if cfg.window else s
+        if cfg.family == "ssm":
+            attn_read = b * 4 * cfg.d_inner * cfg.ssm_state
+            attn_flops = b * cfg.d_inner * cfg.ssm_state * 6.0 * cfg.n_layers
+        elif cfg.family == "hybrid":
+            attn_read = b * 9 * kv_bytes_tok
+            attn_flops = 4 * b * w * cfg.n_heads * cfg.hd * (cfg.n_layers // 3)
+        else:
+            attn_read = b * s * kv_bytes_tok
+            attn_flops = 4 * cfg.n_layers * b * s * cfg.n_kv_heads * cfg.hd
+        flops = 2 * n_mat * b + attn_flops
+        model_flops = 2.0 * n_mat * b
+        hbm = cfg.n_params() * 2 + attn_read
+    return dict(flops=flops, hbm_bytes=hbm, model_flops=model_flops)
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    a = analytic_cell_model(cfg, shape)
+    t_compute = a["flops"] / (chips * PEAK_FLOPS)
+    t_memory = a["hbm_bytes"] / (chips * HBM_BW)
+    coll_dev = rec.get("collective_executed", rec["collective"])["total_bytes"]
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    mfu_bound = (a["model_flops"] / (chips * PEAK_FLOPS)) / t_bound \
+        if t_bound > 0 else 0.0
+    return dict(
+        arch=rec["arch"], shape=rec["shape"],
+        mesh="2x16x16" if rec["multi_pod"] else "16x16", chips=chips,
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        dominant=dominant, model_flops=a["model_flops"],
+        exec_flops=a["flops"],
+        useful_ratio=a["model_flops"] / a["flops"],
+        mfu_bound=mfu_bound,
+        hlo_flops_per_dev=rec.get("flops", 0.0),
+        coll_bytes_per_dev=coll_dev,
+    )
+
+
+def roofline_table(records_dir: str = "results/dryrun",
+                   mesh: str = "sp") -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(records_dir, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'comp(s)':>10}{'mem(s)':>10}"
+           f"{'coll(s)':>10}{'dominant':>11}{'useful':>8}{'MFU≤':>7}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(f"{r['arch']:<24}{r['shape']:<13}"
+                   f"{r['t_compute_s']:>10.4f}{r['t_memory_s']:>10.4f}"
+                   f"{r['t_collective_s']:>10.4f}{r['dominant']:>11}"
+                   f"{r['useful_ratio']:>8.2f}{r['mfu_bound']:>7.1%}")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="sp", choices=["sp", "mp"])
+    args = ap.parse_args()
+    rows = roofline_table(args.dir, args.mesh)
+    print(format_table(rows))
+    out = os.path.join(args.dir, f"roofline_{args.mesh}.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

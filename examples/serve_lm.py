@@ -1,0 +1,66 @@
+"""Serving example: batched requests through prefill + greedy decode.
+
+Demonstrates the serving substrate on a reduced qwen3-family model:
+a queue of variable-length "requests" is padded into one batch, prefilled
+in a single jit'd call, then decoded with the shared KV cache.
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 6 --gen 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import prefill_with_decode, greedy_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # a batch of variable-length requests, left-padded to one shape
+    lens = rng.integers(4, args.max_prompt + 1, args.requests)
+    pad = int(lens.max())
+    prompts = np.zeros((args.requests, pad), np.int32)
+    for i, ln in enumerate(lens):
+        prompts[i, pad - ln:] = rng.integers(1, cfg.vocab, ln)
+    print(f"serving {args.requests} requests, prompt lens {lens.tolist()}, "
+          f"padded to {pad}, generating {args.gen} tokens each")
+
+    cache = model.init_cache(args.requests, pad + args.gen)
+    t0 = time.perf_counter()
+    last_logits, cache = jax.jit(
+        lambda p, c, t: prefill_with_decode(model, p, c, t))(
+            params, cache, jnp.asarray(prompts))
+    jax.block_until_ready(last_logits)
+    t_pre = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    toks, _ = jax.jit(
+        lambda p, c, lg: greedy_decode(model, p, c, lg, pad, args.gen))(
+            params, cache, last_logits)
+    toks = np.asarray(toks)
+    t_dec = time.perf_counter() - t0
+
+    thru = args.requests * args.gen / t_dec
+    print(f"prefill {t_pre*1e3:.0f} ms   decode {t_dec*1e3:.0f} ms "
+          f"({thru:.0f} tok/s incl. compile)")
+    for i in range(min(3, args.requests)):
+        print(f"  request {i}: ...{prompts[i, -4:].tolist()} -> "
+              f"{toks[i][:8].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

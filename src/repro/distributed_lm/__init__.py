@@ -1,0 +1,7 @@
+"""LM distribution glue: shardings, gradient compression."""
+from .sharding import (batch_axes, batch_specs, input_structs, shard_params,
+                       named, cache_structs)
+from .compression import compressed_allreduce
+
+__all__ = ["batch_axes", "batch_specs", "input_structs", "shard_params",
+           "named", "cache_structs", "compressed_allreduce"]

@@ -1,0 +1,51 @@
+"""Gradient compression: int8 all-reduce over the data axis.
+
+Wire format: blockwise-int8 codes + f32 absmax scales per shard; each
+device all-gathers the (codes, scales) pairs — 4x fewer bytes than an f32
+ring all-reduce — then dequantizes and sums locally.  Exposed as a
+shard_map transform usable by an explicit-DP train step (flag-gated; the
+default pjit path lets XLA place the f32 reductions).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.train.optimizer import quantize_blockwise, dequantize_blockwise
+
+Params = Any
+
+__all__ = ["compressed_allreduce"]
+
+
+def compressed_allreduce(tree: Params, mesh: Mesh, axis: str = "data",
+                         block: int = 256) -> Params:
+    """Mean-reduce per-device gradient shards across ``axis`` with int8
+    wire traffic.  Tree leaves carry a leading per-device dim of size
+    mesh.shape[axis] (one local gradient per device); the output drops it
+    (the mean, replicated along ``axis``)."""
+    import numpy as np
+    n = mesh.shape[axis]
+
+    def one(leaf):
+        assert leaf.shape[0] == n, (leaf.shape, n)
+        shape = leaf.shape[1:]
+        nelem = int(np.prod(shape))
+
+        def body(g):                        # g [1, ...] — this device's grad
+            codes, scale = quantize_blockwise(g[0].astype(jnp.float32), block)
+            all_codes = jax.lax.all_gather(codes, axis)       # [n, nb, blk] i8
+            all_scale = jax.lax.all_gather(scale, axis)       # [n, nb, 1] f32
+            deq = all_codes.astype(jnp.float32) * all_scale   # [n, nb, blk]
+            summed = deq.sum(axis=0).reshape(-1)[:nelem]
+            return (summed / n).reshape(shape).astype(g.dtype)
+
+        # out is replicated by construction (same all_gather everywhere);
+        # the static varying-ness checker can't see that through gather
+        return jax.shard_map(body, mesh=mesh, in_specs=P(axis),
+                             out_specs=P(), check_vma=False)(leaf)
+
+    return jax.tree.map(one, tree)

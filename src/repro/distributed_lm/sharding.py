@@ -1,0 +1,103 @@
+"""Per-arch / per-shape sharding glue: batch specs, param placement,
+dry-run input specs.
+
+Conventions (DESIGN.md §5):
+  * batch dim over ('pod', 'data') when multi-pod, else ('data',)
+  * long-context decode (batch too small to shard): KV cache sequence dim
+    over 'data' (exact partitioned softmax)
+  * params: model-parallel over 'model' per the models' param_specs();
+    the 'pod' axis never shards params (pure DP across DCI)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+Params = Any
+
+__all__ = ["batch_axes", "batch_specs", "input_structs", "shard_params",
+           "named", "cache_structs"]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for one training batch dict."""
+    ba = P(batch_axes(mesh))
+    specs = {"tokens": ba, "labels": ba}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = ba
+    elif cfg.family == "encdec":
+        specs["frames"] = ba
+    return specs
+
+
+def input_structs(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for one global training batch — the dry-run pattern."""
+    sp = batch_specs(cfg, mesh)
+    out = {}
+    if cfg.family == "vlm":
+        npatch = min(cfg.num_patches, seq // 2)
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq - npatch), jnp.int32,
+                                             sharding=named(mesh, sp["tokens"]))
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                             sharding=named(mesh, sp["labels"]))
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, npatch, cfg.vision_dim), jnp.float32,
+            sharding=named(mesh, sp["patch_embeds"]))
+        return out
+    out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                         sharding=named(mesh, sp["tokens"]))
+    out["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                         sharding=named(mesh, sp["labels"]))
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.float32,
+            sharding=named(mesh, sp["frames"]))
+    return out
+
+
+def cache_structs(model, cfg: ArchConfig, mesh: Mesh, batch: int, seq: int,
+                  long_ctx: bool) -> Params:
+    """ShapeDtypeStructs for the KV/state cache, with shardings."""
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    specs = model.cache_specs(long_ctx=long_ctx)
+
+    def to_struct(sds, spec):
+        if not long_ctx and "pod" in mesh.axis_names:
+            # extend batch sharding over the pod axis too
+            entries = list(spec)
+            for i, e in enumerate(entries):
+                if e == "data":
+                    entries[i] = ("pod", "data")
+                    break
+            spec = P(*entries)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=named(mesh, spec))
+
+    return jax.tree.map(to_struct, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def shard_params(model, mesh: Mesh) -> Params:
+    """ShapeDtypeStructs for params with NamedShardings attached."""
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = model.param_specs()
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=named(mesh, spec)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

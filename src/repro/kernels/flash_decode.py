@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token flash decode attention.
+
+The hot spot of the ``decode_32k`` / ``long_500k`` cells: one query token
+per (batch, head) against a long KV cache.  Streaming online-softmax over
+KV chunks — the cache is read exactly once HBM→VMEM (the cell is
+memory-bound, §Roofline), with running (m, l, acc) carried in the output
+blocks across the chunk grid dimension.
+
+Layout: q [B, H, hd]; k/v [B, S, H, hd] (GQA already broadcast to full
+heads — the repeat is free bandwidth-wise when kv < H because pages can
+be aliased upstream); additive mask [B, S] (0 / -inf encodes both the
+causal bound and rolling-window validity).
+
+Grid: (B, H, S/chunk), chunk innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_decode_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
+            kg: int, scale: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # [hd]
+    k = k_ref[0, :, 0, :]                             # [chunk, hd]
+    v = v_ref[0, :, 0, :]
+    s = (k @ q) * scale + mask_ref[0]                 # [chunk]
+    m_prev = m_ref[0, 0, 0]
+    l_prev = l_ref[0, 0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum()
+    acc = o_ref[0, 0] * corr + p @ v
+    m_ref[0, 0, 0] = m_new
+    l_ref[0, 0, 0] = l_new
+
+    @pl.when(pl.program_id(2) == kg - 1)
+    def _final():
+        o_ref[0, 0] = acc / jnp.maximum(l_new, 1e-30)
+
+    @pl.when(pl.program_id(2) < kg - 1)
+    def _carry():
+        o_ref[0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        mask: jax.Array, *, chunk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q [B,H,hd] f32/bf16; k/v [B,S,H,hd]; mask [B,S] additive f32.
+    Returns [B,H,hd] in q's dtype (f32 accumulation)."""
+    b, h, hd = q.shape
+    s = k.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)), constant_values=_NEG)
+    kg = k.shape[1] // chunk
+    qf = q.astype(jnp.float32)
+    out, _, _ = pl.pallas_call(
+        functools.partial(_kernel, kg=kg, scale=1.0 / np.sqrt(hd)),
+        grid=(b, h, kg),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, chunk), lambda bi, hi, ki: (bi, ki)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, ki: (bi, hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k.astype(jnp.float32), v.astype(jnp.float32),
+      mask.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: (max, min)-semiring matmul.
+
+C[i,j] = max_k min(A[i,k], B[k,j]) — the inner step of the bottleneck-path
+closure (the paper's max-reachability between hyperedges).
+
+TPU mapping: the MXU cannot evaluate a (max, min) contraction (it is a
+fixed multiply-accumulate array), so this kernel is VPU work.  The design
+goal is therefore *bandwidth*: stream 128-aligned A/B tiles HBM→VMEM once
+per (i, j, k) grid step and keep the [bm, kc, bn] broadcast intermediate
+small enough to live in VREG/VMEM (k is sub-tiled by ``k_chunk``).
+
+Grid: (M/bm, N/bn, K/bk) with k innermost so the output block stays
+resident in VMEM across the k sweep (revisiting accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["maxmin_matmul_pallas"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, k_chunk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]                      # [bm, bk]
+    b = b_ref[...]                      # [bk, bn]
+    bk = a.shape[1]
+    steps = bk // k_chunk
+
+    def body(i, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, i * k_chunk, k_chunk, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, i * k_chunk, k_chunk, axis=0)
+        c = jnp.minimum(a_c[:, :, None], b_c[None, :, :]).max(axis=1)
+        return jnp.maximum(acc, c)
+
+    acc = jax.lax.fori_loop(0, steps, body, o_ref[...])
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "k_chunk",
+                                             "interpret"))
+def maxmin_matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                         bn: int = 128, bk: int = 128, k_chunk: int = 8,
+                         interpret: bool = False) -> jax.Array:
+    """(max, min) matmul with explicit VMEM tiling.  Non-negative inputs;
+    shapes are padded to block multiples with the semiring zero."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        a = jnp.pad(a, ((0, mp), (0, kp)))
+    if np_ or kp:
+        b = jnp.pad(b, ((0, kp), (0, np_)))
+    mg, ng, kg = a.shape[0] // bm, b.shape[1] // bn, a.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_chunk=min(k_chunk, bk)),
+        grid=(mg, ng, kg),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

@@ -1,0 +1,92 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (this container) they run
+under ``interpret=True`` — same kernel body, Python-evaluated, used by the
+test suite to validate against ``ref.py``.  Set ``REPRO_FORCE_REF=1`` to
+bypass Pallas entirely (pure-jnp fallbacks).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .maxmin_matmul import maxmin_matmul_pallas
+from .overlap import overlap_pallas
+from .threshold_closure import threshold_step_pallas
+from .label_join import label_join_pallas
+
+__all__ = ["maxmin_matmul", "overlap", "threshold_step", "label_join",
+           "maxmin_closure_kernel", "threshold_mr_kernel", "use_interpret"]
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def maxmin_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    if _force_ref():
+        return ref.maxmin_matmul_ref(a, b)
+    return maxmin_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk,
+                                interpret=use_interpret())
+
+
+def overlap(b_inc, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    if _force_ref():
+        return ref.overlap_ref(b_inc)
+    return overlap_pallas(b_inc, bm=bm, bn=bn, bk=bk,
+                          interpret=use_interpret())
+
+
+def threshold_step(r, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    if _force_ref():
+        return ref.threshold_step_ref(r)
+    return threshold_step_pallas(r, bm=bm, bn=bn, bk=bk,
+                                 interpret=use_interpret())
+
+
+def label_join(ru, su, rv, sv, *, bq: int = 128):
+    if _force_ref():
+        return ref.label_join_ref(ru, su, rv, sv)
+    return label_join_pallas(ru, su, rv, sv, bq=bq,
+                             interpret=use_interpret())
+
+
+# ---------------------------------------------------------------------------
+# closure drivers on top of the kernels
+# ---------------------------------------------------------------------------
+
+def maxmin_closure_kernel(w: jax.Array, *, rounds: Optional[int] = None,
+                          **blocks) -> jax.Array:
+    """Bottleneck closure via the Pallas (max,min) kernel."""
+    m = w.shape[0]
+    n_rounds = rounds if rounds is not None else max(1, int(np.ceil(np.log2(max(m, 2)))))
+    r = w
+    for _ in range(n_rounds):
+        r = jnp.maximum(r, maxmin_matmul(r, r, **blocks))
+    return r
+
+
+def threshold_mr_kernel(w: jax.Array, thresholds: np.ndarray, *,
+                        rounds: Optional[int] = None, **blocks) -> jax.Array:
+    """MR matrix via the fused threshold-closure kernel (MXU path)."""
+    m = w.shape[0]
+    n_rounds = rounds if rounds is not None else max(1, int(np.ceil(np.log2(max(m, 2)))))
+    t = jnp.asarray(thresholds)
+    adj = (w[None, :, :] >= t[:, None, None]).astype(jnp.float32)
+    eye = jnp.eye(m, dtype=jnp.float32)[None]
+    r = jnp.maximum(adj, eye)
+    for _ in range(n_rounds):
+        r = threshold_step(r, **blocks)
+    mr = (r * t[:, None, None].astype(jnp.float32)).max(axis=0)
+    mr = mr.at[jnp.arange(m), jnp.arange(m)].set(jnp.diagonal(w).astype(jnp.float32))
+    return mr.astype(w.dtype)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused boolean-closure squaring step over a
+threshold batch.
+
+One round of the MXU reformulation of the bottleneck closure (DESIGN.md
+§2): for each threshold slice R[s] ∈ {0,1}^{m×m}, compute
+
+    out[s] = (R[s] @ R[s] > 0)
+
+with the binarization fused into the epilogue of the matmul so the raw
+path-count products never round-trip to HBM.  This is the kernel that
+turns the paper's (max, min) semiring into MXU work.
+
+Grid: (S, M/bm, N/bn, K/bk), k innermost.  The accumulator lives in the
+output VMEM block (f32); on the last k step it is binarized in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["threshold_step_pallas"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, kg: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                          preferred_element_type=jnp.float32)[None]
+
+    @pl.when(pl.program_id(3) == kg - 1)
+    def _binarize():
+        o_ref[...] = (o_ref[...] > 0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def threshold_step_pallas(r: jax.Array, *, bm: int = 128, bn: int = 128,
+                          bk: int = 128, interpret: bool = False) -> jax.Array:
+    """out[s] = (R[s] @ R[s] > 0) for a [S, m, m] float 0/1 batch."""
+    s, m, m2 = r.shape
+    assert m == m2
+    pad = (-m) % max(bm, bn, bk)
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, pad)))
+    mp = r.shape[1]
+    mg, ng, kg = mp // bm, mp // bn, mp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kg=kg),
+        grid=(s, mg, ng, kg),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda ss, i, j, kk: (ss, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda ss, i, j, kk: (ss, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ss, i, j, kk: (ss, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, mp, mp), r.dtype),
+        interpret=interpret,
+    )(r, r)
+    return out[:, :m, :m]

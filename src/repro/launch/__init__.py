@@ -1,0 +1,11 @@
+"""Launchers: mesh construction, dry-run, training, serving.
+
+NOTE: ``dryrun`` must be imported/run as the process entry point (it sets
+XLA_FLAGS before jax initializes); do not import it from an
+already-initialized process and expect 512 devices.
+"""
+from .mesh import make_production_mesh, make_test_mesh
+from .shapes import SHAPES, ShapeCell, cell_applicable, all_cells
+
+__all__ = ["make_production_mesh", "make_test_mesh", "SHAPES", "ShapeCell",
+           "cell_applicable", "all_cells"]

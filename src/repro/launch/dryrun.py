@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh (16×16 single-pod and
+2×16×16 multi-pod), constructs ShapeDtypeStruct stand-ins for params /
+optimizer state / batch / cache (no allocation), lowers the appropriate
+step function (train_step / prefill / serve_step), compiles it, and
+records:
+
+  * memory_analysis()  — bytes per device (proves it fits)
+  * cost_analysis()    — FLOPs / bytes for §Roofline
+  * collective bytes   — parsed from the compiled HLO (§Roofline third term)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.models import build_model
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, ShapeCell, cell_applicable
+from repro.distributed_lm.sharding import (input_structs, shard_params,
+                                           cache_structs, named, batch_axes)
+from repro.train.optimizer import AdamConfig, adam_init, opt_state_specs
+from repro.train.train_step import make_train_step
+from repro.serve.serve_step import make_serve_step, make_prefill_step
+from repro.core.distributed import collective_bytes_of
+from repro.launch.hlo_analysis import loop_aware_collectives
+from jax.sharding import PartitionSpec as P
+
+
+def _struct_tree_with_specs(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=named(mesh, spec)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               keep_hlo: bool = False, overrides: Optional[Dict] = None,
+               mesh_shape: Optional[tuple] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the §Dry-run record.
+    ``overrides`` applies dataclasses.replace on the config and
+    ``mesh_shape`` re-factors the 256 chips into (data, model) — the two
+    §Perf hillclimb levers (e.g. {"gqa_repeat": True}, (32, 8))."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    rec: Dict[str, Any] = dict(arch=arch, shape=shape_name,
+                               multi_pod=multi_pod)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    if mesh_shape is not None:
+        from jax.sharding import AxisType
+        axes = (("pod", "data", "model") if len(mesh_shape) == 3
+                else ("data", "model"))
+        mesh = jax.make_mesh(tuple(mesh_shape), axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+        rec["mesh_shape"] = list(mesh_shape)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    from repro.models.layers import sharding_mesh
+    with mesh, sharding_mesh(mesh):
+        params = shard_params(model, mesh)
+        if shape.kind == "train":
+            opt_cfg = AdamConfig(use_8bit=cfg.opt_8bit)
+            opt_shapes = jax.eval_shape(lambda p: adam_init(p, opt_cfg), params)
+            ospecs = opt_state_specs(model.param_specs(), params, opt_cfg,
+                                     data_size=mesh.shape["data"],
+                                     zero1=cfg.zero1)
+            opt_state = _struct_tree_with_specs(opt_shapes, ospecs, mesh)
+            batch = input_structs(cfg, mesh, shape.global_batch, shape.seq_len)
+            step_fn = make_train_step(model, cfg, opt_cfg)
+            lowered = jax.jit(step_fn).lower(params, opt_state, batch)
+        elif shape.kind == "prefill":
+            batch = input_structs(cfg, mesh, shape.global_batch, shape.seq_len)
+            step_fn = make_prefill_step(model, cfg)
+            lowered = jax.jit(step_fn).lower(params, batch)
+        else:  # decode
+            long_ctx = shape.name.startswith("long")
+            cache = cache_structs(model, cfg, mesh, shape.global_batch,
+                                  shape.seq_len, long_ctx)
+            ba = P(batch_axes(mesh)) if not long_ctx else P()
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                          sharding=named(mesh, ba))
+            pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=named(mesh, P()))
+            step_fn = make_serve_step(model, cfg)
+            lowered = jax.jit(step_fn).lower(params, cache, tokens, pos)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_of(hlo)          # flat (bodies counted once)
+    coll_exec = loop_aware_collectives(hlo)  # × while trip counts
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    def _mem_field(name):
+        return int(getattr(mem, name, 0) or 0) if mem is not None else 0
+
+    rec.update(
+        status="ok",
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        collective=coll,
+        collective_executed={k: coll_exec[k] for k in
+                             ("bytes", "counts", "total_bytes")},
+        loops=coll_exec.get("loops", []),
+        memory=dict(
+            argument_bytes=_mem_field("argument_size_in_bytes"),
+            output_bytes=_mem_field("output_size_in_bytes"),
+            temp_bytes=_mem_field("temp_size_in_bytes"),
+            generated_code_bytes=_mem_field("generated_code_size_in_bytes"),
+        ),
+        model_params=cfg.n_params(),
+        model_params_active=cfg.n_active_params(),
+    )
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+        rec["_hlo"] = hlo
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default=None,
+                    help="directory for per-cell JSON records")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON record already exists")
+    ap.add_argument("--set", type=str, default=None, dest="overrides",
+                    help='JSON config overrides, e.g. \'{"gqa_repeat":true}\'')
+    ap.add_argument("--tag", type=str, default="",
+                    help="suffix for output record filenames")
+    ap.add_argument("--mesh-shape", type=str, default=None,
+                    help="alternative chip factorization, e.g. 32,8")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides) if args.overrides else None
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
+
+    cells = []
+    archs = list(ALIASES.keys()) if args.all else [args.arch]
+    shapes = list(SHAPES.keys()) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        suffix = f"__{args.tag}" if args.tag else ""
+        fn = f"{ALIASES.get(a, a)}__{s}__{'mp' if mp else 'sp'}{suffix}.json"
+        if args.skip_existing and args.out and \
+                os.path.exists(os.path.join(args.out, fn)):
+            print(f"[cached ] {tag}")
+            continue
+        try:
+            rec = lower_cell(a, s, multi_pod=mp, overrides=overrides,
+                             mesh_shape=mesh_shape)
+        except Exception as e:
+            failures += 1
+            rec = dict(arch=a, shape=s, multi_pod=mp, status="error",
+                       error=f"{type(e).__name__}: {e}",
+                       tb=traceback.format_exc()[-2000:])
+        print(f"[{rec['status']:7s}] {tag} "
+              + (f"flops={rec.get('flops', 0):.3e} "
+                 f"coll={rec.get('collective', {}).get('total_bytes', 0):.3e} "
+                 f"compile={rec.get('compile_s', 0)}s"
+                 if rec["status"] == "ok" else rec.get("reason",
+                                                       rec.get("error", ""))))
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            rec.pop("_hlo", None)
+            with open(os.path.join(args.out, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

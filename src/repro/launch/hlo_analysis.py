@@ -1,0 +1,150 @@
+"""Loop-aware HLO accounting.
+
+XLA's ``cost_analysis``/flat text parsing counts a ``while`` body ONCE,
+but lax.scan-driven programs (layer stacks, microbatch accumulation,
+kv-chunked attention) execute bodies trip-count times.  This module
+parses the compiled HLO into computations, recovers while trip counts
+from the loop-condition constants, propagates multipliers along the call
+graph (body/condition/to_apply/calls), and reports *executed* collective
+bytes — the number §Roofline's collective term needs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["parse_computations", "loop_aware_collectives"]
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# `%name (args...) -> ret {`   or   `ENTRY %name (...) -> ... {`
+# (args may contain nested parens — match loosely on name + arrow + brace)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_LINE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_CALLREF = re.compile(
+    r"(?:body|condition|to_apply|calls)=\{?%?([\w.\-]+)\}?")
+_WHILE = re.compile(r"\bwhile\(")
+_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+# XLA annotates loops with the statically-known trip count
+_KNOWN_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for d, dims in _SHAPE.findall(tok):
+        if d not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(x) for x in dims.split(",") if x])) if dims else 1
+        total += n * _DTYPE_BYTES[d]
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, Dict]:
+    """-> {comp_name: {lines, coll_bytes, coll_counts, entry}}"""
+    comps: Dict[str, Dict] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        hdr = _COMP_HDR.match(stripped)
+        if hdr and (line.startswith("ENTRY") or not line.startswith(" ")):
+            cur = hdr.group(1)
+            comps[cur] = dict(lines=[], entry=line.startswith("ENTRY"))
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur]["lines"].append(stripped)
+    for name, c in comps.items():
+        per_op = {k: 0 for k in _COLL_OPS}
+        counts = {k: 0 for k in _COLL_OPS}
+        for ln in c["lines"]:
+            m = _COLL_LINE.search(ln)
+            if m:
+                per_op[m.group(2)] += _shape_bytes(m.group(1))
+                counts[m.group(2)] += 1
+        c["coll_bytes"] = per_op
+        c["coll_counts"] = counts
+    return comps
+
+
+def _trip_count(cond_comp: Dict) -> int:
+    """Heuristic: the loop bound is the max s32 scalar constant compared in
+    the condition computation (lax.scan lowers to `iter < C`)."""
+    best = 1
+    for ln in cond_comp["lines"]:
+        for c in _CONST.findall(ln):
+            best = max(best, int(c))
+    return best
+
+
+def loop_aware_collectives(hlo: str) -> Dict:
+    """Executed collective bytes per op kind, multiplying while bodies by
+    their trip counts (nested loops compose multiplicatively)."""
+    comps = parse_computations(hlo)
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    if entry is None:
+        return {"bytes": {k: 0 for k in _COLL_OPS}, "total_bytes": 0,
+                "loops": []}
+
+    mult: Dict[str, float] = {}
+    loops: List[Tuple[str, int]] = []
+
+    def visit(name: str, m: float, depth: int = 0):
+        if name not in comps or depth > 50:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        c = comps[name]
+        for ln in c["lines"]:
+            refs = _CALLREF.findall(ln)
+            if not refs:
+                continue
+            is_while = bool(_WHILE.search(ln))
+            trip = 1
+            if is_while:
+                cond_name = None
+                body_name = None
+                for kindm in re.finditer(
+                        r"(body|condition)=\{?%?([\w.\-]+)\}?", ln):
+                    if kindm.group(1) == "condition":
+                        cond_name = kindm.group(2)
+                    else:
+                        body_name = kindm.group(2)
+                kt = _KNOWN_TRIP.search(ln)
+                if kt:
+                    trip = int(kt.group(1))
+                elif cond_name and cond_name in comps:
+                    trip = _trip_count(comps[cond_name])
+                if body_name:
+                    loops.append((body_name, trip))
+                    visit(body_name, m * trip, depth + 1)
+                if cond_name:
+                    visit(cond_name, m * (trip + 1), depth + 1)
+            else:
+                for r in refs:
+                    visit(r, m, depth + 1)
+
+    visit(entry, 1.0)
+    total = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for name, m in mult.items():
+        c = comps.get(name)
+        if not c:
+            continue
+        for k in _COLL_OPS:
+            total[k] += int(c["coll_bytes"][k] * m)
+            counts[k] += int(c["coll_counts"][k] * m)
+    return {"bytes": total, "counts": counts,
+            "total_bytes": int(sum(total.values())),
+            "loops": sorted(set(loops))}

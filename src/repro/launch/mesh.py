@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init and
+only then calls these.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16×16 = 256 chips, axes (data, model).
+    Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the ``pod``
+    axis carries only DP gradient all-reduce (training) or the threshold
+    batch (reachability engine) across the inter-pod DCI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for CPU tests (requires the host-device-count flag)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,64 @@
+"""Serving launcher: batched prefill + greedy decode on the host devices.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+from repro.serve import prefill_with_decode, greedy_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       (args.batch, args.prompt_len)), jnp.int32)
+    cache = model.init_cache(args.batch, args.prompt_len + args.gen)
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.enc_frames, cfg.d_model)).astype(np.float32))
+        cache = model.prefill_cross(params, cache, frames)
+
+    t0 = time.perf_counter()
+    last_logits, cache = jax.jit(
+        lambda p, c, t: prefill_with_decode(model, p, c, t))(params, cache,
+                                                             prompts)
+    jax.block_until_ready(last_logits)
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    toks, cache = jax.jit(
+        lambda p, c, lg: greedy_decode(model, p, c, lg, args.prompt_len,
+                                       args.gen))(params, cache, last_logits)
+    toks = np.asarray(toks)
+    t_gen = time.perf_counter() - t0
+
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: {t_gen*1e3:.1f} ms "
+          f"({args.gen*args.batch/t_gen:.1f} tok/s incl. compile)")
+    print("sample tokens:", toks[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

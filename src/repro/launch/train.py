@@ -1,0 +1,84 @@
+"""Training launcher: real training on the current host's devices (tests /
+the ~100M example) or, with ``--dryrun``, the production-mesh compile.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+from repro.train import (AdamConfig, adam_init, make_train_step,
+                         SyntheticStream, SupervisorConfig, TrainSupervisor)
+
+
+def run_training(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str,
+                 ckpt_every: int = 50, seed: int = 0, lr: float = 3e-4,
+                 mesh: Mesh | None = None, log_every: int = 10):
+    """Host-scale training loop with checkpoint/restart via the
+    supervisor.  Returns the supervisor metrics log."""
+    model = build_model(cfg)
+    opt_cfg = AdamConfig(lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 1),
+                         use_8bit=cfg.opt_8bit)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = adam_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model, cfg, opt_cfg), donate_argnums=(0, 1))
+    data = iter(SyntheticStream(cfg, batch, seq, seed=seed))
+
+    def to_dev(b):
+        return jax.tree.map(jnp.asarray, b)
+
+    data_dev = map(to_dev, data)
+    sup = TrainSupervisor(
+        SupervisorConfig(ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                         max_steps=steps),
+        step_fn, data_dev)
+    start, params, opt_state = sup.resume_or_init(params, opt_state)
+    if start:
+        print(f"[resume] from step {start}")
+        params = jax.tree.map(jnp.asarray, params)
+        opt_state = jax.tree.map(jnp.asarray, opt_state)
+    step, params, opt_state, log = sup.run(params, opt_state,
+                                           start_step=start)
+    for m in log:
+        if m["step"] % log_every == 0 or m["step"] == step:
+            print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
+                  f"({m['step_time_s']*1e3:.0f} ms)")
+    if sup.straggler_events:
+        print(f"[straggler] slow steps at {sup.straggler_events}")
+    return step, params, opt_state, log
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, microbatch=min(cfg.microbatch, args.batch))
+    run_training(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                 lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""LM substrate: the assigned architecture pool (DESIGN.md §4)."""
+from .common import ArchConfig
+from .registry import build_model
+from .transformer import TransformerLM
+from .mamba import MambaLM
+from .rglru import GriffinLM
+from .whisper import WhisperModel
+from . import layers
+
+__all__ = ["ArchConfig", "build_model", "TransformerLM", "MambaLM",
+           "GriffinLM", "WhisperModel", "layers"]

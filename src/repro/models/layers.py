@@ -1,0 +1,538 @@
+"""Model building blocks: norms, rotary, GQA attention, MLPs, MoE.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays; every ``init_*`` has a
+    matching ``*_specs`` returning an identical pytree of PartitionSpec
+    (model-parallel over the ``model`` mesh axis).
+  * ``apply`` functions are pure; compute dtype is the caller's (bf16),
+    master params f32 are cast at entry.
+  * attention supports GQA (kv heads broadcast), optional qkv bias
+    (qwen2), optional per-head qk RMSNorm (qwen3), sliding windows
+    (recurrentgemma), cross-attention (whisper), and a one-token decode
+    path against a (possibly sequence-sharded) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig
+
+__all__ = [
+    "rms_norm", "init_rms", "rms_specs", "rope_cos_sin", "apply_rope",
+    "init_dense", "dense_specs", "init_attention", "attention_specs",
+    "attention_apply", "attention_decode", "init_mlp", "mlp_specs",
+    "mlp_apply", "init_moe", "moe_specs", "moe_apply", "cross_entropy_loss",
+    "sinusoidal_positions",
+]
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sharding-constraint helpers (§Perf knobs)
+# ---------------------------------------------------------------------------
+
+import contextlib
+import contextvars
+
+_MESH_VAR: "contextvars.ContextVar" = contextvars.ContextVar(
+    "repro_constraint_mesh", default=None)
+
+
+@contextlib.contextmanager
+def sharding_mesh(mesh):
+    """Make ``mesh`` visible to ``constrain`` during tracing (jax 0.8
+    requires concrete NamedShardings for with_sharding_constraint)."""
+    tok = _MESH_VAR.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH_VAR.reset(tok)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the threaded mesh; "batch" expands
+    to the mesh's ('pod','data') axes; no-op when no mesh is threaded
+    (single-device tests)."""
+    mesh = _MESH_VAR.get()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    names = tuple(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in names) or None
+    entries = tuple(batch if s == "batch" else
+                    (s if (s is None or s in names) else None)
+                    for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rms(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_specs() -> Params:
+    return {"scale": P(None)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal positions
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, hd: int, theta: float,
+                 dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """positions [...,] -> cos/sin [..., hd/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; cos/sin [..., S, hd/2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style sinusoidal embedding for given positions [...,] ->
+    [..., d].  Built from iota in-graph (no baked constants)."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = positions[..., None].astype(jnp.float32) / (10000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# dense projection
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_specs(spec_in, spec_out, bias: bool = False) -> Params:
+    p = {"w": P(spec_in, spec_out)}
+    if bias:
+        p["b"] = P(spec_out)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, cfg.n_heads * hd, cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, d, False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd)
+        p["k_norm"] = init_rms(hd)
+    return p
+
+
+def attention_specs(cfg: ArchConfig) -> Params:
+    p = {
+        "wq": dense_specs(None, "model", cfg.qkv_bias),
+        "wk": dense_specs(None, "model", cfg.qkv_bias),
+        "wv": dense_specs(None, "model", cfg.qkv_bias),
+        "wo": dense_specs("model", None, False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_specs()
+        p["k_norm"] = rms_specs()
+    return p
+
+
+def _qkv(p: Params, cfg: ArchConfig, x: jax.Array, kv_x: Optional[jax.Array],
+         positions: Optional[jax.Array], use_rope: bool):
+    b, s = x.shape[:2]
+    hd = cfg.hd
+    src = x if kv_x is None else kv_x
+    q = dense_apply(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense_apply(p["wk"], src).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], src).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        cos, sin = rope_cos_sin(pos, hd, cfg.rope_theta, x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
+          n_rep: int) -> jax.Array:
+    """q [b,sq,h,hd], k/v [b,sk,kv,hd]; GQA via reshape to groups.
+    Softmax in f32; mask is additive (0 / -inf), broadcast [b?,1?,sq,sk]."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    q = q.reshape(b, sq, kv, n_rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if mask is not None:
+        scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, n_rep: int, *,
+                  causal: bool, window: int, chunk_q: int,
+                  chunk_k: int, shard_heads: bool = False) -> jax.Array:
+    """Flash-style online-softmax attention, double-chunked over q and kv.
+
+    Bounds the transient score block to [b, kv, r, cq, ck] f32 regardless
+    of sequence length — the substrate that makes the 32k-prefill dry-run
+    cells fit (DESIGN §5).  Pure JAX (scan over kv chunks inside a map
+    over q chunks); differentiates for training.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    assert sq % chunk_q == 0 and sk % chunk_k == 0, (sq, sk, chunk_q, chunk_k)
+    nq, nk = sq // chunk_q, sk // chunk_k
+    qs = q.reshape(b, nq, chunk_q, kv, n_rep, hd).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(b, nk, chunk_k, kv, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, chunk_k, kv, hd).transpose(1, 0, 3, 2, 4)
+    if shard_heads:
+        # §Perf A iter 3: pin the kv-group dim (= full heads when
+        # gqa_repeat) to `model` through the chunk transposes so the bwd
+        # pass never falls back to gather-all-heads.
+        qs = constrain(qs, None, "batch", "model", None, None, None)
+        ks = constrain(ks, None, "batch", "model", None, None)
+        vs = constrain(vs, None, "batch", "model", None, None)
+    scale = 1.0 / np.sqrt(hd)
+
+    def per_q(args):
+        qi, qblk = args                     # qblk [b, kv, r, cq, hd]
+
+        def step(carry, kin):
+            ki, kblk, vblk = kin            # kblk/vblk [b, kv, ck, hd]
+            m, l, acc = carry
+            s_ = jnp.einsum("bkrqh,bksh->bkrqs", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            qpos = qi * chunk_q + jnp.arange(chunk_q)[:, None]
+            kpos = ki * chunk_k + jnp.arange(chunk_k)[None, :]
+            ok = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                ok &= kpos <= qpos
+            if window:
+                ok &= kpos > qpos - window
+            s_ = jnp.where(ok[None, None, None], s_, -jnp.inf)
+            m_new = jnp.maximum(m, s_.max(-1))
+            # fully-masked prefixes leave m_new = -inf; exp(-inf - -inf)
+            # is NaN — a finite stand-in makes every exp() collapse to 0
+            # (and m = -inf implies l = acc = 0, so corr = 0 is exact)
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p_ = jnp.exp(s_ - m_safe[..., None])
+            corr = jnp.exp(m - m_safe)
+            l_new = l * corr + p_.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bksh->bkrqh", p_.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            if shard_heads:
+                m_new = constrain(m_new, "batch", "model", None, None)
+                l_new = constrain(l_new, "batch", "model", None, None)
+                acc_new = constrain(acc_new, "batch", "model", None, None, None)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, n_rep, chunk_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, n_rep, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kv, n_rep, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      (jnp.arange(nk), ks, vs))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    outs = jax.lax.map(per_q, (jnp.arange(nq), qs))   # [nq, b, kv, r, cq, hd]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd)
+
+
+def attention_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    kv_x: Optional[jax.Array] = None,
+                    positions: Optional[jax.Array] = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill).  ``kv_x`` switches to
+    cross-attention (no mask, no rope on cross keys per whisper).
+    Long sequences route to the chunked online-softmax path."""
+    b, s = x.shape[:2]
+    cross = kv_x is not None
+    q, k, v = _qkv(p, cfg, x, kv_x, positions, use_rope and not cross)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if cfg.gqa_repeat and n_rep > 1:
+        # §Perf A: replicate K/V over TP and broadcast kv→H heads locally
+        # so the (kv, rep) score batch dims never split a sharded head dim.
+        q = constrain(q, "batch", None, "model", None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+        bk_, sk_, kvh, hd_ = k.shape
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (bk_, sk_, kvh, n_rep, hd_)).reshape(
+                                 bk_, sk_, kvh * n_rep, hd_)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (bk_, sk_, kvh, n_rep, hd_)).reshape(
+                                 bk_, sk_, kvh * n_rep, hd_)
+        n_rep = 1
+    sk = k.shape[1]
+    chunk = cfg.attn_chunk
+    if not cross and chunk and s > chunk and s % chunk == 0 and sk % chunk == 0:
+        out = _sdpa_chunked(q, k, v, n_rep, causal=causal, window=window,
+                            chunk_q=chunk, chunk_k=chunk,
+                            shard_heads=cfg.gqa_repeat and cfg.act_shard)
+    else:
+        mask = None
+        if not cross and causal:
+            qi = jnp.arange(s)[:, None]
+            ki = jnp.arange(sk)[None, :]
+            ok = ki <= qi
+            if window:
+                ok &= ki > qi - window
+            mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[None]
+            mask = jnp.broadcast_to(mask, (b, s, sk))
+        out = _sdpa(q, k, v, mask, n_rep)
+    if cfg.act_shard:
+        out = constrain(out, "batch", None, "model", None)
+    return dense_apply(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.hd))
+
+
+def attention_decode(p: Params, cfg: ArchConfig, x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array, pos: jax.Array,
+                     *, window: int = 0, use_rope: bool = True,
+                     update_cache: bool = True, slot=None,
+                     causal_mask: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x [b, 1, d]; cache [b, S, kv, hd]; pos [] int.
+    Returns (out [b,1,d], new_k, new_v).  With the cache sharded on S the
+    softmax reductions lower to tiny [b,h]-sized all-reduces (DESIGN §5).
+    ``slot`` enables a rolling-window cache: the new K/V is written at
+    ``slot`` (= pos % S) while RoPE still uses the absolute ``pos`` — the
+    ``ki <= pos`` mask is then exact for both warmup (pos < S) and steady
+    state (all S slots live).  For cross-attention set
+    update_cache=False (static encoder cache)."""
+    b = x.shape[0]
+    hd = cfg.hd
+    q, k, v = _qkv(p, cfg, x, None, pos[None, None] if use_rope else None,
+                   use_rope)
+    write_at = pos if slot is None else slot
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, write_at, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, write_at, 0, 0))
+    sk = cache_k.shape[1]
+    ki = jnp.arange(sk)[None, :]
+    ok = (ki <= pos) if causal_mask else jnp.ones((1, sk), bool)
+    if window and slot is None and causal_mask:
+        ok &= ki > pos - window
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (b, 1, sk))
+    out = _sdpa(q, cache_k.astype(x.dtype), cache_v.astype(x.dtype), mask,
+                cfg.n_heads // cfg.n_kv_heads)
+    return dense_apply(p["wo"], out.reshape(b, 1, cfg.n_heads * hd)), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, kind: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"gate": init_dense(ks[0], d, f), "up": init_dense(ks[1], d, f),
+                "down": init_dense(ks[2], f, d)}
+    return {"fc1": init_dense(ks[0], d, f, bias=True),
+            "fc2": init_dense(ks[1], f, d, bias=True)}
+
+
+def mlp_specs(kind: str = "swiglu") -> Params:
+    if kind == "swiglu":
+        return {"gate": dense_specs(None, "model"), "up": dense_specs(None, "model"),
+                "down": dense_specs("model", None)}
+    return {"fc1": dense_specs(None, "model", bias=True),
+            "fc2": dense_specs("model", None, bias=True)}
+
+
+def mlp_apply(p: Params, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        return dense_apply(p["down"],
+                           jax.nn.silu(dense_apply(p["gate"], x)) *
+                           dense_apply(p["up"], x))
+    return dense_apply(p["fc2"], jax.nn.gelu(dense_apply(p["fc1"], x)))
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, one-hot dispatch/combine einsums — MXU friendly)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": init_dense(ks[0], d, e, scale=scale),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) / np.sqrt(f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f)
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[5], d, cfg.d_ff)
+    return p
+
+
+def moe_specs(cfg: ArchConfig) -> Params:
+    if cfg.expert_sharding == "model":
+        es = P("model", None, None)
+        es_d = P("model", None, None)
+    elif cfg.expert_sharding == "model+data":
+        es = P("model", None, "data")
+        es_d = P("model", "data", None)
+    else:                                  # "ffn": replicate experts
+        es = P(None, None, "model")
+        es_d = P(None, "model", None)
+    p = {"router": dense_specs(None, None),
+         "w_gate": es, "w_up": es, "w_down": es_d}
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_specs()
+    if cfg.dense_residual:
+        p["dense"] = mlp_specs()
+    return p
+
+
+def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k routing with one-hot dispatch einsums (no
+    scatter — the standard TPU MoE formulation).  Two dispatch modes:
+
+    * dense (default, paper-faithful capacity-free): expert inputs are
+      [E, t, d] — exact, but the dispatch tensor scales with E·t.
+    * capacity (cfg.moe_capacity, §Perf B): Switch-style [E, cap, d] with
+      cap = ⌈top_k·t·capacity_factor/E⌉; overflow tokens drop (standard
+      trade — the router aux loss keeps loads balanced).
+
+    Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = dense_apply(p["router"], xt.astype(jnp.float32))      # [t, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, cfg.top_k)               # [t, k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=x.dtype)     # [t, k, E]
+
+    # aux load-balancing loss (Switch-style)
+    density = (onehot.sum(1) > 0).astype(jnp.float32).mean(0)      # [E]
+    density_proxy = probs.mean(0)
+    aux = (density * density_proxy).sum() * (cfg.n_experts ** 2) \
+        * cfg.router_aux_weight / cfg.top_k
+
+    if cfg.moe_capacity:
+        cap = int(np.ceil(cfg.top_k * t * cfg.capacity_factor
+                          / cfg.n_experts))
+        cap = max(cap, 1)
+        flat = onehot.reshape(t * cfg.top_k, cfg.n_experts)        # slot-major
+        pos = (jnp.cumsum(flat, axis=0) - flat)                    # arrival idx
+        pos = (pos * flat).sum(-1).reshape(t, cfg.top_k)           # [t, k]
+        keep = (pos < cap).astype(x.dtype)
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype)           # [t, k, cap]
+        # [t, k, E, cap] one-hot dispatch (the Switch dispatch tensor)
+        disp = onehot[..., None] * pos_oh[:, :, None, :] * keep[..., None, None]
+        comb = disp * gate_vals[..., None, None].astype(x.dtype)
+        # expert-parallel layout: E over `model`, ffn hidden over `data`
+        # when expert_sharding="model+data" — pin the activations so GSPMD
+        # keeps the (17.8 GB/layer) expert weights resident instead of
+        # gathering them (§Perf B iter 2)
+        e_ax = "model" if cfg.expert_sharding.startswith("model") else None
+        f_ax = "data" if cfg.expert_sharding == "model+data" else (
+            "model" if cfg.expert_sharding == "ffn" else None)
+        xin = jnp.einsum("tkec,td->ecd", disp, xt)                 # [E, cap, d]
+        if cfg.act_shard:
+            xin = constrain(xin, e_ax, None, None)
+        hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin,
+                                    p["w_gate"].astype(x.dtype)))
+        hu = jnp.einsum("ecd,edf->ecf", xin, p["w_up"].astype(x.dtype))
+        if cfg.act_shard:
+            hg = constrain(hg, e_ax, None, f_ax)
+            hu = constrain(hu, e_ax, None, f_ax)
+        ye = jnp.einsum("ecf,efd->ecd", hg * hu,
+                        p["w_down"].astype(x.dtype))
+        if cfg.act_shard:
+            ye = constrain(ye, e_ax, None, None)
+        out = jnp.einsum("tkec,ecd->td", comb, ye)
+    else:
+        combine = (onehot * gate_vals[..., None].astype(x.dtype)).sum(1)
+        dispatch = (onehot.sum(1) > 0).astype(x.dtype)             # [t, E]
+        xin = jnp.einsum("te,td->etd", dispatch, xt)
+        hg = jax.nn.silu(jnp.einsum("etd,edf->etf", xin,
+                                    p["w_gate"].astype(x.dtype)))
+        hu = jnp.einsum("etd,edf->etf", xin, p["w_up"].astype(x.dtype))
+        ye = jnp.einsum("etf,efd->etd", hg * hu, p["w_down"].astype(x.dtype))
+        out = jnp.einsum("etd,te->td", ye, combine)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], xt)
+    if cfg.dense_residual:
+        out = out + mlp_apply(p["dense"], xt)
+    return out.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab: int) -> jax.Array:
+    """Mean next-token CE.  One-hot contraction (not gather) so the
+    vocab-sharded logits reduce with a single small all-reduce."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, vocab, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot,
+                      preferred_element_type=jnp.float32)
+    return (lse - gold).mean()
+
+
+def remat_policy(cfg: ArchConfig):
+    """Map cfg.remat_policy to a jax.checkpoint policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable

@@ -1,0 +1,241 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b): attention-free family.
+
+Train path: chunked parallel scan — the selective recurrence
+``h_t = Ā_t h_{t-1} + B̄_t x_t`` is a first-order linear recurrence, solved
+with ``jax.lax.associative_scan`` *within* fixed-size chunks and a cheap
+sequential ``lax.scan`` carrying the boundary state *across* chunks.  The
+chunking bounds the materialized [chunk, d_inner, d_state] state tensor
+(the full-sequence scan would need seq·d_inner·d_state floats — 2 GB/seq
+at 4k context), which is the TPU-memory adaptation of Mamba's
+"hardware-aware" fused scan.
+
+Decode path: O(1) recurrent step on (conv window, ssm state) — no KV
+cache, which is why this arch owns the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+__all__ = ["MambaLM"]
+
+
+def _init_block(key, cfg: ArchConfig) -> Params:
+    d, di, st, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dtr
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.init_rms(d),
+        "in_proj": L.init_dense(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": L.init_dense(ks[2], di, dtr + 2 * st),
+        "dt_proj": L.init_dense(ks[3], dtr, di, bias=True),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None],
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_dense(ks[4], di, d),
+    }
+
+
+def _block_specs(cfg: ArchConfig) -> Params:
+    return {
+        "ln": L.rms_specs(),
+        "in_proj": L.dense_specs(None, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "x_proj": L.dense_specs("model", None),
+        "dt_proj": L.dense_specs(None, "model", bias=True),
+        "A_log": P("model", None),
+        "D": P("model"),
+        "out_proj": L.dense_specs("model", None),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d.  x [B, S, di]; w [K, di].  ``state`` is the
+    trailing K-1 window from the previous segment (decode path)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def _selective_scan_chunked(u: jax.Array, dt: jax.Array, A: jax.Array,
+                            Bc: jax.Array, Cc: jax.Array, chunk: int,
+                            h0: jax.Array | None = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """u/dt [B,S,di], A [di,st], Bc/Cc [B,S,st] -> (y [B,S,di], h_last).
+
+    Discretize: Ā = exp(dt·A) (per-channel, per-state), B̄x = dt·B·u.
+    Within a chunk: associative_scan over (Ā, B̄x) pairs; across chunks:
+    sequential carry of the boundary state.
+    """
+    b, s, di = u.shape
+    st = A.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 discretizes to Ā = 1, B̄x = 0: padded steps are identity
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    nc = s_p // chunk
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A[None, None])   # [B,S,di,st]
+    dBx = (dt * u)[..., None].astype(jnp.float32) * Bc[:, :, None, :]  # [B,S,di,st]
+    dA = dA.reshape(b, nc, chunk, di, st).transpose(1, 0, 2, 3, 4)
+    dBx = dBx.reshape(b, nc, chunk, di, st).transpose(1, 0, 2, 3, 4)
+    Ccs = Cc.reshape(b, nc, chunk, st).transpose(1, 0, 2, 3)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, inp):
+        da, dbx, cc = inp                       # [B, chunk, di, st]
+        a_acc, b_acc = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        hs = a_acc * h[:, None] + b_acc         # [B, chunk, di, st]
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc)
+        return hs[:, -1], y
+
+    h = (jnp.zeros((b, di, st), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    h, ys = jax.lax.scan(chunk_step, h, (dA, dBx, Ccs))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s_p, di)[:, :s]
+    return y.astype(u.dtype), h
+
+
+def _block_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    res = x
+    x = L.rms_norm(p["ln"], x, cfg.norm_eps)
+    xz = L.dense_apply(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+    proj = L.dense_apply(p["x_proj"], xs)
+    dt_r, Bc, Cc = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(L.dense_apply(p["dt_proj"], dt_r).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    y, _ = _selective_scan_chunked(xs, dt, A, Bc.astype(jnp.float32),
+                                   Cc.astype(jnp.float32), cfg.scan_chunk)
+    y = y + xs * p["D"].astype(xs.dtype)
+    y = y * jax.nn.silu(z)
+    return res + L.dense_apply(p["out_proj"], y)
+
+
+def _block_decode(p: Params, cfg: ArchConfig, x: jax.Array, conv_state,
+                  ssm_state) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B, 1, d]; conv_state [B, K-1, di]; ssm_state [B, di, st]."""
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    res = x
+    x = L.rms_norm(p["ln"], x, cfg.norm_eps)
+    xz = L.dense_apply(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    new_conv = jnp.concatenate([conv_state[:, 1:], xs.astype(conv_state.dtype)],
+                               axis=1)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"],
+                                  state=conv_state))
+    proj = L.dense_apply(p["x_proj"], xs)
+    dt_r, Bc, Cc = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(L.dense_apply(p["dt_proj"], dt_r).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None, None])                       # [B,1,di,st]
+    dBx = (dt * xs.astype(jnp.float32))[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+    h = ssm_state.astype(jnp.float32) * dA[:, 0] + dBx[:, 0]          # [B,di,st]
+    y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(xs.dtype) + xs * p["D"].astype(xs.dtype)
+    y = y * jax.nn.silu(z)
+    out = res + L.dense_apply(p["out_proj"], y)
+    return out, new_conv, h.astype(ssm_state.dtype)
+
+
+class MambaLM:
+    """falcon-mamba-7b: 64 Mamba-1 blocks, RMSNorm, untied head."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kH, kB = jax.random.split(key, 3)
+        return {
+            "embed": jax.random.normal(kE, (cfg.vocab, cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "ln_f": L.init_rms(cfg.d_model),
+            "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+                jax.random.split(kB, cfg.n_layers)),
+            "lm_head": L.init_dense(kH, cfg.d_model, cfg.vocab),
+        }
+
+    def param_specs(self) -> Params:
+        blk = jax.tree.map(lambda s: P(None, *s), _block_specs(self.cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+        return {"embed": P("model", None), "ln_f": L.rms_specs(),
+                "blocks": blk, "lm_head": L.dense_specs(None, "model")}
+
+    def apply(self, params: Params, tokens: jax.Array,
+              patch_embeds=None) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+        block = functools.partial(_block_apply, cfg=cfg)
+        if cfg.remat:
+            block = jax.checkpoint(block, policy=L.remat_policy(cfg))
+
+        def scan_fn(h, lp):
+            return block(lp, x=h), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return L.dense_apply(params["lm_head"], x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, aux = self.apply(params, batch["tokens"])
+        return L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab) + aux
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                               cfg.d_inner), dtype),
+            "ssm": jnp.zeros((cfg.n_layers, batch, cfg.d_inner,
+                              cfg.ssm_state), jnp.float32),
+        }
+
+    def cache_specs(self, long_ctx: bool = False) -> Params:
+        # state is O(1) in seq — shard the wide d_inner dim over `model`,
+        # batch over `data` when present
+        bspec = None if long_ctx else "data"
+        return {"conv": P(None, bspec, None, "model"),
+                "ssm": P(None, bspec, "model", None)}
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+
+        def scan_fn(h, inp):
+            lp, cs, ss = inp
+            h2, cs2, ss2 = _block_decode(lp, cfg, h, cs, ss)
+            return h2, (cs2, ss2)
+
+        x, (conv, ssm) = jax.lax.scan(scan_fn, x,
+                                      (params["blocks"], cache["conv"],
+                                       cache["ssm"]))
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return L.dense_apply(params["lm_head"], x), {"conv": conv, "ssm": ssm}

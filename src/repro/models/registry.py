@@ -1,0 +1,27 @@
+"""Model registry: family -> implementation class."""
+from __future__ import annotations
+
+from .common import ArchConfig
+from .transformer import TransformerLM
+from .mamba import MambaLM
+from .rglru import GriffinLM
+from .whisper import WhisperModel
+
+__all__ = ["build_model"]
+
+_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "ssm": MambaLM,
+    "hybrid": GriffinLM,
+    "encdec": WhisperModel,
+}
+
+
+def build_model(cfg: ArchConfig):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name}")
+    return cls(cfg)

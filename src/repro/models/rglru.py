@@ -1,0 +1,295 @@
+"""RecurrentGemma / Griffin hybrid (recurrentgemma-2b): RG-LRU recurrent
+blocks + local sliding-window MQA, pattern (rec, rec, attn) repeating.
+
+The RG-LRU recurrence  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+is a diagonal linear recurrence → ``associative_scan`` over the sequence
+(state is [B, S, d_rnn] — no d_state blow-up, so no chunking needed).
+Local attention (window 2048) keeps the attn blocks sub-quadratic, which
+is why this arch runs the ``long_500k`` cell.
+
+Layer driving: the 26-layer stack is grouped into 8 scanned (rec, rec,
+attn) groups + an unscanned (rec, rec) tail, keeping the lowered HLO one
+group body deep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+__all__ = ["GriffinLM"]
+
+_C = 8.0   # RG-LRU recurrence sharpness constant (Griffin paper)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU temporal block
+# ---------------------------------------------------------------------------
+
+def _init_rec(key, cfg: ArchConfig) -> Params:
+    d, dr = cfg.d_model, cfg.drnn
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.init_rms(d),
+        "in_x": L.init_dense(ks[0], d, dr),
+        "in_gate": L.init_dense(ks[1], d, dr),
+        "conv_w": jax.random.normal(ks[2], (4, dr), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": L.init_dense(ks[3], dr, dr, bias=True),
+        "w_i": L.init_dense(ks[4], dr, dr, bias=True),
+        "lam": jnp.full((dr,), 4.0, jnp.float32),   # sigmoid(4) ≈ .982 decay
+        "out": L.init_dense(ks[5], dr, d),
+    }
+
+
+def _rec_specs(cfg: ArchConfig) -> Params:
+    return {
+        "ln": L.rms_specs(),
+        "in_x": L.dense_specs(None, "model"),
+        "in_gate": L.dense_specs(None, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "w_a": L.dense_specs(None, "model", bias=True),
+        "w_i": L.dense_specs(None, "model", bias=True),
+        "lam": P("model"),
+        "out": L.dense_specs("model", None),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def _rglru(p: Params, xs: jax.Array, h0: Optional[jax.Array] = None
+           ) -> Tuple[jax.Array, jax.Array]:
+    """xs [B, S, dr] -> (ys, h_last).  f32 recurrence."""
+    r = jax.nn.sigmoid(L.dense_apply(p["w_a"], xs).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense_apply(p["w_i"], xs).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xs.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_acc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h + a_acc * h0[:, None].astype(jnp.float32)
+    return h.astype(xs.dtype), h[:, -1]
+
+
+def _rec_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    res = x
+    x = L.rms_norm(p["ln"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(L.dense_apply(p["in_gate"], x))
+    xs = _causal_conv(L.dense_apply(p["in_x"], x), p["conv_w"], p["conv_b"])
+    ys, _ = _rglru(p, xs)
+    return res + L.dense_apply(p["out"], ys * gate)
+
+
+def _rec_decode(p: Params, cfg: ArchConfig, x: jax.Array, conv_state,
+                h_state) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    res = x
+    x = L.rms_norm(p["ln"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(L.dense_apply(p["in_gate"], x))
+    xin = L.dense_apply(p["in_x"], x)
+    new_conv = jnp.concatenate([conv_state[:, 1:], xin.astype(conv_state.dtype)],
+                               axis=1)
+    xs = _causal_conv(xin, p["conv_w"], p["conv_b"], state=conv_state)
+    r = jax.nn.sigmoid(L.dense_apply(p["w_a"], xs).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense_apply(p["w_i"], xs).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)[:, 0]
+    gated = (jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+             * (i[:, 0] * xs[:, 0].astype(jnp.float32)))
+    h = a * h_state.astype(jnp.float32) + gated
+    ys = h[:, None].astype(xs.dtype)
+    return res + L.dense_apply(p["out"], ys * gate), new_conv, h
+
+
+# ---------------------------------------------------------------------------
+# group = (rec, rec, attn), each followed by an MLP
+# ---------------------------------------------------------------------------
+
+def _init_group(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "rec1": _init_rec(ks[0], cfg), "mlp1": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        "ln_m1": L.init_rms(cfg.d_model),
+        "rec2": _init_rec(ks[2], cfg), "mlp2": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff),
+        "ln_m2": L.init_rms(cfg.d_model),
+        "ln_a": L.init_rms(cfg.d_model), "attn": L.init_attention(ks[4], cfg),
+        "mlp3": L.init_mlp(ks[5], cfg.d_model, cfg.d_ff),
+        "ln_m3": L.init_rms(cfg.d_model),
+    }
+
+
+def _group_specs(cfg: ArchConfig) -> Params:
+    return {
+        "rec1": _rec_specs(cfg), "mlp1": L.mlp_specs(), "ln_m1": L.rms_specs(),
+        "rec2": _rec_specs(cfg), "mlp2": L.mlp_specs(), "ln_m2": L.rms_specs(),
+        "ln_a": L.rms_specs(), "attn": L.attention_specs(cfg),
+        "mlp3": L.mlp_specs(), "ln_m3": L.rms_specs(),
+    }
+
+
+def _mlp_res(p, ln, cfg, x):
+    return x + L.mlp_apply(p, L.rms_norm(ln, x, cfg.norm_eps))
+
+
+def _group_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = _rec_apply(p["rec1"], cfg, x)
+    x = _mlp_res(p["mlp1"], p["ln_m1"], cfg, x)
+    x = _rec_apply(p["rec2"], cfg, x)
+    x = _mlp_res(p["mlp2"], p["ln_m2"], cfg, x)
+    x = x + L.attention_apply(p["attn"], cfg,
+                              L.rms_norm(p["ln_a"], x, cfg.norm_eps),
+                              causal=True, window=cfg.window)
+    return _mlp_res(p["mlp3"], p["ln_m3"], cfg, x)
+
+
+class GriffinLM:
+    """recurrentgemma-2b: 26 layers = 8 × (rec, rec, attn) + (rec, rec)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // 3
+        self.n_tail = cfg.n_layers - 3 * self.n_groups   # trailing rec blocks
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kB, kT = jax.random.split(key, 3)
+        p: Params = {
+            "embed": jax.random.normal(kE, (cfg.vocab, cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "ln_f": L.init_rms(cfg.d_model),
+            "groups": jax.vmap(lambda k: _init_group(k, cfg))(
+                jax.random.split(kB, self.n_groups)),
+        }
+        tails = []
+        for i, k in enumerate(jax.random.split(kT, self.n_tail)):
+            k1, k2 = jax.random.split(k)
+            tails.append({"rec": _init_rec(k1, cfg),
+                          "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+                          "ln_m": L.init_rms(cfg.d_model)})
+        p["tail"] = tails
+        return p
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        grp = jax.tree.map(lambda s: P(None, *s), _group_specs(cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+        tail = [{"rec": _rec_specs(cfg), "mlp": L.mlp_specs(),
+                 "ln_m": L.rms_specs()} for _ in range(self.n_tail)]
+        return {"embed": P("model", None), "ln_f": L.rms_specs(),
+                "groups": grp, "tail": tail}
+
+    def apply(self, params: Params, tokens: jax.Array,
+              patch_embeds=None) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+        group = functools.partial(_group_apply, cfg=cfg)
+        if cfg.remat:
+            group = jax.checkpoint(group, policy=L.remat_policy(cfg))
+
+        def scan_fn(h, gp):
+            return group(gp, x=h), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["groups"])
+        for tp in params["tail"]:
+            x = _rec_apply(tp["rec"], cfg, x)
+            x = _mlp_res(tp["mlp"], tp["ln_m"], cfg, x)
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        # gemma-style tied head
+        return x @ params["embed"].astype(x.dtype).T, jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, aux = self.apply(params, batch["tokens"])
+        return L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab) + aux
+
+    # -- decode --------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        w = min(cfg.window, max_seq)
+        g, dr = self.n_groups, cfg.drnn
+        return {
+            "conv1": jnp.zeros((g, batch, 3, dr), dtype),
+            "h1": jnp.zeros((g, batch, dr), jnp.float32),
+            "conv2": jnp.zeros((g, batch, 3, dr), dtype),
+            "h2": jnp.zeros((g, batch, dr), jnp.float32),
+            "k": jnp.zeros((g, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((g, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+            "tail_conv": jnp.zeros((max(self.n_tail, 1), batch, 3, dr), dtype),
+            "tail_h": jnp.zeros((max(self.n_tail, 1), batch, dr), jnp.float32),
+        }
+
+    def cache_specs(self, long_ctx: bool = False) -> Params:
+        b = None if long_ctx else "data"
+        return {
+            "conv1": P(None, b, None, "model"), "h1": P(None, b, "model"),
+            "conv2": P(None, b, None, "model"), "h2": P(None, b, "model"),
+            "k": P(None, b, None, None, None), "v": P(None, b, None, None, None),
+            "tail_conv": P(None, b, None, "model"), "tail_h": P(None, b, "model"),
+        }
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        """Local attention uses a rolling window cache: position pos lands
+        in slot pos % window, and the mask covers the last `window` steps."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+        w = cache["k"].shape[2]
+        slot = pos % w
+
+        def group_step(h, inp):
+            gp, c1, h1, c2, h2, ck, cv = inp
+            h_, c1n, h1n = _rec_decode(gp["rec1"], cfg, h, c1, h1)
+            h_ = _mlp_res(gp["mlp1"], gp["ln_m1"], cfg, h_)
+            h_, c2n, h2n = _rec_decode(gp["rec2"], cfg, h_, c2, h2)
+            h_ = _mlp_res(gp["mlp2"], gp["ln_m2"], cfg, h_)
+            a, ckn, cvn = L.attention_decode(
+                gp["attn"], cfg, L.rms_norm(gp["ln_a"], h_, cfg.norm_eps),
+                ck, cv, pos, slot=slot)
+            h_ = h_ + a
+            h_ = _mlp_res(gp["mlp3"], gp["ln_m3"], cfg, h_)
+            return h_, (c1n, h1n, c2n, h2n, ckn, cvn)
+
+        x, (c1, h1, c2, h2, ks, vs) = jax.lax.scan(
+            group_step, x, (params["groups"], cache["conv1"], cache["h1"],
+                            cache["conv2"], cache["h2"], cache["k"],
+                            cache["v"]))
+        tail_conv, tail_h = [], []
+        for i, tp in enumerate(params["tail"]):
+            x, cn, hn = _rec_decode(tp["rec"], cfg, x, cache["tail_conv"][i],
+                                    cache["tail_h"][i])
+            x = _mlp_res(tp["mlp"], tp["ln_m"], cfg, x)
+            tail_conv.append(cn)
+            tail_h.append(hn)
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        logits = x @ params["embed"].astype(x.dtype).T
+        new_cache = {"conv1": c1, "h1": h1, "conv2": c2, "h2": h2,
+                     "k": ks, "v": vs,
+                     "tail_conv": (jnp.stack(tail_conv) if tail_conv
+                                   else cache["tail_conv"]),
+                     "tail_h": (jnp.stack(tail_h) if tail_h
+                                else cache["tail_h"])}
+        return logits, new_cache

@@ -1,0 +1,202 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Layer stacks are parameter-stacked ([L, ...] leading dim) and driven by
+``lax.scan`` so the lowered HLO is one layer body regardless of depth
+(compile-time and HLO-size control for the 512-device dry-run), with
+optional ``jax.checkpoint`` remat around the block body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+__all__ = ["TransformerLM"]
+
+
+def _init_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_rms(cfg.d_model), "attn": L.init_attention(k1, cfg),
+         "ln2": L.init_rms(cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _block_specs(cfg: ArchConfig) -> Params:
+    p = {"ln1": L.rms_specs(), "attn": L.attention_specs(cfg),
+         "ln2": L.rms_specs()}
+    if cfg.family == "moe":
+        p["moe"] = L.moe_specs(cfg)
+    else:
+        p["mlp"] = L.mlp_specs()
+    return p
+
+
+def _block_apply(p: Params, cfg: ArchConfig, x: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.act_shard:
+        x = L.constrain(x, "batch", None, None)
+    h = x + L.attention_apply(p["attn"], cfg, L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                              causal=True, window=cfg.window)
+    aux = jnp.zeros((), jnp.float32)
+    y = L.rms_norm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = L.moe_apply(p["moe"], cfg, y)
+    else:
+        y = L.mlp_apply(p["mlp"], y)
+    out = h + y
+    if cfg.act_shard:
+        out = L.constrain(out, "batch", None, None)
+    return out, aux
+
+
+def _block_decode(p: Params, cfg: ArchConfig, x: jax.Array, ck, cv, pos
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    a, ck, cv = L.attention_decode(p["attn"], cfg,
+                                   L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                                   ck, cv, pos, window=cfg.window)
+    h = x + a
+    y = L.rms_norm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = L.moe_apply(p["moe"], cfg, y)
+    else:
+        y = L.mlp_apply(p["mlp"], y)
+    return h + y, ck, cv
+
+
+class TransformerLM:
+    """Dense / MoE / VLM decoder LM (llava, qwen*, minitron, arctic, ...)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kH, kB, kV = jax.random.split(key, 4)
+        p: Params = {
+            "embed": jax.random.normal(kE, (cfg.vocab, cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "ln_f": L.init_rms(cfg.d_model),
+            "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+                jax.random.split(kB, cfg.n_layers)),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.init_dense(kH, cfg.d_model, cfg.vocab)
+        if cfg.vision_dim:
+            kv1, kv2 = jax.random.split(kV)
+            p["vision_proj"] = {
+                "fc1": L.init_dense(kv1, cfg.vision_dim, cfg.d_model, bias=True),
+                "fc2": L.init_dense(kv2, cfg.d_model, cfg.d_model, bias=True),
+            }
+        return p
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        blk = jax.tree.map(lambda s: P(None, *s), _block_specs(cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+        p: Params = {"embed": P("model", None), "ln_f": L.rms_specs(),
+                     "blocks": blk}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_specs(None, "model")
+        if cfg.vision_dim:
+            p["vision_proj"] = {"fc1": L.dense_specs(None, "model", bias=True),
+                                "fc2": L.dense_specs("model", None, bias=True)}
+        return p
+
+    # -- embedding helpers ---------------------------------------------------
+    def _embed(self, params: Params, tokens: jax.Array,
+               patch_embeds: Optional[jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"][tokens].astype(dt)
+        if cfg.vision_dim and patch_embeds is not None:
+            vp = params["vision_proj"]
+            pe = L.dense_apply(vp["fc2"], jax.nn.gelu(
+                L.dense_apply(vp["fc1"], patch_embeds.astype(dt))))
+            x = jnp.concatenate([pe, x], axis=1)     # patches prepended
+        return x
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return x @ params["embed"].astype(x.dtype).T
+        return L.dense_apply(params["lm_head"], x)
+
+    # -- full-sequence forward ----------------------------------------------
+    def apply(self, params: Params, tokens: jax.Array,
+              patch_embeds: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+        """-> (logits [B, S, V], aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, patch_embeds)
+
+        block = functools.partial(_block_apply, cfg=cfg)
+        if cfg.remat:
+            block = jax.checkpoint(block, policy=L.remat_policy(cfg))
+
+        def scan_fn(carry, layer_p):
+            h, aux = carry
+            h2, a = block(layer_p, x=h)
+            return (h2, aux + a), None
+
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                       params["blocks"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, a = block(lp, x=x)
+                aux = aux + a
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return self._head(params, x), aux
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, aux = self.apply(params, batch["tokens"],
+                                 batch.get("patch_embeds"))
+        labels = batch["labels"]
+        # logits cover [patches + tokens]; labels align with the full stream
+        return L.cross_entropy_loss(logits[:, -labels.shape[1]:], labels,
+                                    self.cfg.vocab) + aux
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    def cache_specs(self, long_ctx: bool = False) -> Params:
+        # batch over data + sequence over model (exact partitioned softmax:
+        # the seq-dim reductions lower to [b,h]-sized all-reduces, DESIGN
+        # §5).  For batch=1 long-context decode shard seq over both axes.
+        spec = (P(None, None, ("data", "model"), None, None) if long_ctx
+                else P(None, "data", "model", None, None))
+        return {"k": spec, "v": spec}
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        """tokens [B, 1]; pos scalar int32 -> (logits [B, 1, V], cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, None)
+
+        def scan_fn(h, inp):
+            lp, ck, cv = inp
+            h2, ck2, cv2 = _block_decode(lp, cfg, h, ck, cv, pos)
+            return h2, (ck2, cv2)
+
+        x, (ks, vs) = jax.lax.scan(scan_fn, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return self._head(params, x), {"k": ks, "v": vs}

@@ -1,0 +1,214 @@
+"""Whisper-large-v3 backbone (audio family): encoder-decoder transformer.
+
+Per the assignment the modality frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings [B, enc_frames, d_model] (the two
+conv1d layers + log-mel stage are not modeled).  Positions are sinusoidal
+(so arbitrary decoder lengths lower — whisper's learned 448-position table
+would cap the 32k cells; noted in DESIGN.md §Arch-applicability).
+
+Decoder layers: self-attention (causal) + cross-attention over the
+encoder states + GELU MLP; pre-LayerNorm like the original.  Decode path
+precomputes the cross K/V once (``prefill_cross``) and carries only the
+self-attention cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+__all__ = ["WhisperModel"]
+
+
+def _init_enc_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rms(cfg.d_model), "attn": L.init_attention(k1, cfg),
+            "ln2": L.init_rms(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, kind="gelu")}
+
+
+def _enc_block_specs(cfg: ArchConfig) -> Params:
+    return {"ln1": L.rms_specs(), "attn": L.attention_specs(cfg),
+            "ln2": L.rms_specs(), "mlp": L.mlp_specs(kind="gelu")}
+
+
+def _enc_block_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = x + L.attention_apply(p["attn"], cfg, L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                              causal=False, use_rope=False)
+    return x + L.mlp_apply(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps),
+                           kind="gelu")
+
+
+def _init_dec_block(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_rms(cfg.d_model), "self_attn": L.init_attention(k1, cfg),
+            "ln2": L.init_rms(cfg.d_model), "cross_attn": L.init_attention(k2, cfg),
+            "ln3": L.init_rms(cfg.d_model),
+            "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, kind="gelu")}
+
+
+def _dec_block_specs(cfg: ArchConfig) -> Params:
+    return {"ln1": L.rms_specs(), "self_attn": L.attention_specs(cfg),
+            "ln2": L.rms_specs(), "cross_attn": L.attention_specs(cfg),
+            "ln3": L.rms_specs(), "mlp": L.mlp_specs(kind="gelu")}
+
+
+def _dec_block_apply(p: Params, cfg: ArchConfig, x: jax.Array,
+                     enc: jax.Array) -> jax.Array:
+    x = x + L.attention_apply(p["self_attn"], cfg,
+                              L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                              causal=True, use_rope=False)
+    x = x + L.attention_apply(p["cross_attn"], cfg,
+                              L.rms_norm(p["ln2"], x, cfg.norm_eps),
+                              kv_x=enc, use_rope=False)
+    return x + L.mlp_apply(p["mlp"], L.rms_norm(p["ln3"], x, cfg.norm_eps),
+                           kind="gelu")
+
+
+class WhisperModel:
+    """Enc-dec backbone; inputs are (frames [B,F,D] stub, tokens [B,S])."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kD, kT = jax.random.split(key, 3)
+        return {
+            "embed": jax.random.normal(kT, (cfg.vocab, cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(
+                jax.random.split(kE, cfg.enc_layers)),
+            "enc_ln": L.init_rms(cfg.d_model),
+            "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(
+                jax.random.split(kD, cfg.n_layers)),
+            "dec_ln": L.init_rms(cfg.d_model),
+        }
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        enc = jax.tree.map(lambda s: P(None, *s), _enc_block_specs(cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+        dec = jax.tree.map(lambda s: P(None, *s), _dec_block_specs(cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+        # whisper's 51866-token vocab does not divide the 16-way model
+        # axis (input shardings must tile exactly), so the embedding
+        # shards on d_model instead; the tied head's contraction then
+        # reduces over the sharded feature dim (one small all-reduce).
+        return {"embed": P(None, "model"), "enc_blocks": enc,
+                "enc_ln": L.rms_specs(), "dec_blocks": dec,
+                "dec_ln": L.rms_specs()}
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        pos = L.sinusoidal_positions(jnp.arange(frames.shape[1]), cfg.d_model)
+        x = frames.astype(dt) + pos[None].astype(dt)
+        block = functools.partial(_enc_block_apply, cfg=cfg)
+        if cfg.remat:
+            block = jax.checkpoint(block, policy=L.remat_policy(cfg))
+
+        def scan_fn(h, lp):
+            return block(lp, x=h), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["enc_blocks"])
+        return L.rms_norm(params["enc_ln"], x, cfg.norm_eps)
+
+    # -- decoder full-sequence -------------------------------------------------
+    def apply(self, params: Params, tokens: jax.Array,
+              frames: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        dt = jnp.dtype(cfg.compute_dtype)
+        s = tokens.shape[1]
+        pos = L.sinusoidal_positions(jnp.arange(s), cfg.d_model)
+        x = params["embed"][tokens].astype(dt) + pos[None].astype(dt)
+        block = functools.partial(_dec_block_apply, cfg=cfg)
+        if cfg.remat:
+            block = jax.checkpoint(block, policy=L.remat_policy(cfg))
+
+        def scan_fn(h, lp):
+            return block(lp, x=h, enc=enc), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["dec_blocks"])
+        x = L.rms_norm(params["dec_ln"], x, cfg.norm_eps)
+        return x @ params["embed"].astype(x.dtype).T, jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, aux = self.apply(params, batch["tokens"], batch["frames"])
+        return L.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab) + aux
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_frames, kv, hd), dtype),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_frames, kv, hd), dtype),
+        }
+
+    def cache_specs(self, long_ctx: bool = False) -> Params:
+        sspec = (P(None, None, ("data", "model"), None, None) if long_ctx
+                 else P(None, "data", "model", None, None))
+        cspec = P(None, None if long_ctx else "data", None, None, None)
+        return {"k": sspec, "v": sspec, "cross_k": cspec, "cross_v": cspec}
+
+    def prefill_cross(self, params: Params, cache: Params,
+                      frames: jax.Array) -> Params:
+        """Precompute per-layer cross K/V from the encoder output."""
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        b, f = enc.shape[:2]
+
+        def one_layer(lp):
+            ca = lp["cross_attn"]
+            k = L.dense_apply(ca["wk"], enc).reshape(b, f, cfg.n_kv_heads, cfg.hd)
+            v = L.dense_apply(ca["wv"], enc).reshape(b, f, cfg.n_kv_heads, cfg.hd)
+            return k, v
+
+        ks, vs = jax.vmap(one_layer)(params["dec_blocks"])
+        return dict(cache, cross_k=ks.astype(cache["cross_k"].dtype),
+                    cross_v=vs.astype(cache["cross_v"].dtype))
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        pos_emb = L.sinusoidal_positions(pos[None], cfg.d_model)
+        x = params["embed"][tokens].astype(dt) + pos_emb[None].astype(dt)
+
+        def scan_fn(h, inp):
+            lp, ck, cv, xk, xv = inp
+            a, ck2, cv2 = L.attention_decode(lp["self_attn"], cfg,
+                                             L.rms_norm(lp["ln1"], h, cfg.norm_eps),
+                                             ck, cv, pos, use_rope=False)
+            h = h + a
+            c, _, _ = L.attention_decode(lp["cross_attn"], cfg,
+                                         L.rms_norm(lp["ln2"], h, cfg.norm_eps),
+                                         xk, xv, pos, use_rope=False,
+                                         update_cache=False,
+                                         causal_mask=False)
+            h = h + c
+            h = h + L.mlp_apply(lp["mlp"], L.rms_norm(lp["ln3"], h, cfg.norm_eps),
+                                kind="gelu")
+            return h, (ck2, cv2)
+
+        x, (ks, vs) = jax.lax.scan(scan_fn, x,
+                                   (params["dec_blocks"], cache["k"],
+                                    cache["v"], cache["cross_k"],
+                                    cache["cross_v"]))
+        x = L.rms_norm(params["dec_ln"], x, cfg.norm_eps)
+        logits = x @ params["embed"].astype(x.dtype).T
+        return logits, dict(cache, k=ks, v=vs)

@@ -1,0 +1,6 @@
+"""Serving substrate."""
+from .serve_step import make_serve_step, make_prefill_step
+from .kvcache import prefill_with_decode, greedy_decode
+
+__all__ = ["make_serve_step", "make_prefill_step", "prefill_with_decode",
+           "greedy_decode"]

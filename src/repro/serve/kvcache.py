@@ -1,0 +1,39 @@
+"""Serving cache utilities: prefill + decode drivers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+__all__ = ["prefill_with_decode", "greedy_decode"]
+
+
+def prefill_with_decode(model, params: Params, cache: Params,
+                        tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    """Fill the cache by running decode_step over the prompt with a scan.
+    Works for every family (uniform fallback; attention archs can instead
+    run the full-sequence path and scatter K/V, see serve_step.prefill)."""
+    def step(carry, t):
+        cache, pos = carry
+        logits, cache = model.decode_step(params, cache, t[:, None], pos)
+        return (cache, pos + 1), logits[:, 0]
+
+    (cache, _), logits = jax.lax.scan(step, (cache, jnp.int32(0)), tokens.T)
+    return logits[-1], cache
+
+
+def greedy_decode(model, params: Params, cache: Params, last_logits,
+                  start_pos: int, steps: int) -> Tuple[jax.Array, Params]:
+    """Greedy continuation for ``steps`` tokens."""
+    def step(carry, _):
+        cache, logits, pos = carry
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits2, cache = model.decode_step(params, cache, tok[:, None], pos)
+        return (cache, logits2[:, 0], pos + 1), tok
+
+    (cache, _, _), toks = jax.lax.scan(
+        step, (cache, last_logits, jnp.int32(start_pos)), None, length=steps)
+    return toks.T, cache

@@ -1,0 +1,44 @@
+"""Serve steps: the lowerable units for the decode/prefill dry-run cells.
+
+``make_serve_step``: one-token decode against a KV cache of ``seq_len``
+(the ``decode_*`` / ``long_*`` cells lower THIS, not train_step).
+``make_prefill_step``: full-sequence forward returning last-token logits
+(the ``prefill_*`` cells).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+Params = Any
+
+__all__ = ["make_serve_step", "make_prefill_step"]
+
+
+def make_serve_step(model, cfg: ArchConfig) -> Callable:
+    def serve_step(params: Params, cache: Params, tokens: jax.Array,
+                   pos: jax.Array) -> Tuple[jax.Array, Params]:
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return logits, cache
+    return serve_step
+
+
+def make_prefill_step(model, cfg: ArchConfig) -> Callable:
+    if cfg.family == "encdec":
+        def prefill(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+            logits, _ = model.apply(params, batch["tokens"], batch["frames"])
+            return logits[:, -1]
+    elif cfg.family == "vlm":
+        def prefill(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+            logits, _ = model.apply(params, batch["tokens"],
+                                    batch["patch_embeds"])
+            return logits[:, -1]
+    else:
+        def prefill(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+            logits, _ = model.apply(params, batch["tokens"])
+            return logits[:, -1]
+    return prefill

@@ -1,0 +1,17 @@
+"""Training substrate: optimizer, train step, checkpointing, data,
+fault tolerance."""
+from .optimizer import (AdamConfig, adam_init, adam_update, lr_schedule,
+                        quantize_blockwise, dequantize_blockwise,
+                        zero1_specs, opt_state_specs, global_norm)
+from .train_step import make_train_step, make_eval_step
+from . import checkpoint
+from .data import SyntheticStream, make_batch, shingle_hypergraph, dedup_corpus
+from .fault_tolerance import SupervisorConfig, TrainSupervisor
+
+__all__ = [
+    "AdamConfig", "adam_init", "adam_update", "lr_schedule",
+    "quantize_blockwise", "dequantize_blockwise", "zero1_specs",
+    "opt_state_specs", "global_norm", "make_train_step", "make_eval_step",
+    "checkpoint", "SyntheticStream", "make_batch", "shingle_hypergraph",
+    "dedup_corpus", "SupervisorConfig", "TrainSupervisor",
+]

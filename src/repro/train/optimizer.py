@@ -1,0 +1,265 @@
+"""Optimizers: AdamW (f32 moments) and blockwise-int8 Adam (8-bit moments
+with per-block f32 absmax scales — the memory trick that lets the 480B
+MoE's optimizer state fit a single pod, DESIGN.md §5).
+
+Both are pure-pytree (no optax dependency) and compose with:
+  * ZeRO-1: ``zero1_specs`` further shards the moment tensors over the
+    ``data`` axis (params stay replicated across data — only the update
+    math shards, which is exactly optimizer-state sharding).
+  * cosine LR schedule with linear warmup, global-norm clipping,
+    decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+__all__ = ["AdamConfig", "adam_init", "adam_update", "lr_schedule",
+           "global_norm", "clip_by_global_norm", "quantize_blockwise",
+           "dequantize_blockwise", "zero1_specs", "opt_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    use_8bit: bool = False
+    q_block: int = 256
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantization
+# ---------------------------------------------------------------------------
+
+def quantize_blockwise(x: jax.Array, block: int = 256
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """x (any shape) -> (int8 codes, f32 per-block scales).  Flattened
+    absmax quantization; the pad tail quantizes zeros (harmless).
+    (Wire-format variant — used by gradient compression.)"""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_blockwise(codes: jax.Array, scale: jax.Array,
+                         shape: Tuple[int, ...]) -> jax.Array:
+    n = int(np.prod(shape))
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def quantize_shaped(x: jax.Array, block: int = 256
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Shape-preserving blockwise int8 along the LAST dim:
+    codes has x's shape (int8, last dim padded up to a block multiple);
+    scales are [..., n_blocks] f32.  Because codes/scales keep the param's
+    leading-dim layout, optimizer moments can shard EXACTLY like the param
+    — the 8-bit Adam update stays elementwise under any (model, data)
+    sharding with zero resharding (§Perf B: the flat layout forced GSPMD
+    to all-gather 625 GB of dequantized moments per step on arctic-480b).
+    """
+    *lead, last = x.shape
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    nb = (last + pad) // block
+    blocks = x.reshape(*lead, nb, block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return (codes.reshape(*lead, last + pad),
+            scale[..., 0].astype(jnp.float32))
+
+
+def dequantize_shaped(codes: jax.Array, scale: jax.Array,
+                      shape: Tuple[int, ...], block: int = 256) -> jax.Array:
+    *lead, last_p = codes.shape
+    nb = last_p // block
+    x = codes.reshape(*lead, nb, block).astype(jnp.float32) * scale[..., None]
+    return x.reshape(*lead, last_p)[..., :shape[-1]]
+
+
+_V_FLOOR = 1e-24
+
+
+def quantize_v_shaped(v: jax.Array, block: int = 256):
+    """Second-moment quantization in the LOG domain: absmax-int8 on
+    log(v) bounds the *relative* error of the Adam denominator (linear
+    absmax flushes small v to 0 and the update explodes — measured, see
+    EXPERIMENTS.md §Perf B iter 3)."""
+    return quantize_shaped(jnp.log(v + _V_FLOOR), block)
+
+
+def dequantize_v_shaped(codes: jax.Array, scale: jax.Array,
+                        shape: Tuple[int, ...], block: int = 256) -> jax.Array:
+    return jnp.exp(dequantize_shaped(codes, scale, shape, block))
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def adam_init(params: Params, cfg: AdamConfig) -> Dict[str, Any]:
+    if cfg.use_8bit:
+        def zeros8(p):
+            codes, scale = quantize_shaped(
+                jnp.zeros(p.shape if p.ndim else (1,), jnp.float32),
+                cfg.q_block)
+            return {"codes": codes, "scale": scale}
+
+        def zeros8v(p):
+            codes, scale = quantize_v_shaped(
+                jnp.zeros(p.shape if p.ndim else (1,), jnp.float32),
+                cfg.q_block)
+            return {"codes": codes, "scale": scale}
+        return {"m": jax.tree.map(zeros8, params),
+                "v": jax.tree.map(zeros8v, params),
+                "count": jnp.zeros((), jnp.int32)}
+    return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def lr_schedule(cfg: AdamConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adam_update(params: Params, grads: Params, state: Dict[str, Any],
+                cfg: AdamConfig) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    c1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    if cfg.use_8bit:
+        def upd(p, g, m8, v8):
+            shape = p.shape if p.ndim else (1,)
+            m = dequantize_shaped(m8["codes"], m8["scale"], shape,
+                                  cfg.q_block).reshape(p.shape)
+            v = dequantize_v_shaped(v8["codes"], v8["scale"], shape,
+                                    cfg.q_block).reshape(p.shape)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+            newp = p - step_ - lr * cfg.weight_decay * p
+            mc, ms = quantize_shaped(m.reshape(shape), cfg.q_block)
+            vc, vs = quantize_v_shaped(v.reshape(shape), cfg.q_block)
+            return newp.astype(p.dtype), {"codes": mc, "scale": ms}, \
+                {"codes": vc, "scale": vs}
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                           is_leaf=lambda x: isinstance(x, jax.Array)
+                           or hasattr(x, "shape") and not isinstance(x, dict))
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": newm, "v": newv, "count": count}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        newp = p.astype(jnp.float32) - step_ - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), m, v
+
+    newp_m_v = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    newp = jax.tree.map(lambda t: t[0], newp_m_v,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda t: t[1], newp_m_v,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda t: t[2], newp_m_v,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"m": newm, "v": newv, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# sharding of optimizer state (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+def zero1_specs(spec: P, shape: Tuple[int, ...], data_size: int,
+                axis: str = "data") -> P:
+    """Extend a param spec with `data`-axis sharding on the first free,
+    divisible dim — optimizer-state sharding a la ZeRO stage 1.  No-op if
+    the spec already uses ``axis`` (e.g. model+data expert sharding)."""
+    def uses(e):
+        return e == axis or (isinstance(e, tuple) and axis in e)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if any(uses(e) for e in entries):
+        return P(*entries)
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % data_size == 0 and s >= data_size:
+            entries[i] = axis
+            return P(*entries)
+    return P(*entries)
+
+
+def opt_state_specs(param_specs: Params, params_shape: Params,
+                    cfg: AdamConfig, data_size: int, zero1: bool = True
+                    ) -> Dict[str, Any]:
+    """Spec tree matching ``adam_init``'s state tree."""
+    def mom_spec(spec, sds):
+        if cfg.use_8bit:
+            # shape-preserving codes shard EXACTLY like the param (plus
+            # ZeRO on a free divisible dim); scales drop the last dim.
+            shape = sds.shape if len(sds.shape) else (1,)
+            sp = zero1_specs(spec, shape, data_size) if zero1 else \
+                P(*(list(spec) + [None] * (len(shape) - len(spec))))
+            entries = list(sp) + [None] * (len(shape) - len(sp))
+            # codes keep the padded last dim; if padding changed it, the
+            # original tiling may no longer divide — drop that axis entry
+            last_pad = -(-shape[-1] // cfg.q_block) * cfg.q_block
+            if last_pad != shape[-1] and entries[-1] is not None:
+                entries[-1] = None
+            codes_spec = P(*entries)
+            scale_spec = P(*entries[:-1], None)
+            return {"codes": codes_spec, "scale": scale_spec}
+        return zero1_specs(spec, sds.shape, data_size) if zero1 else spec
+
+    m = jax.tree.map(mom_spec, param_specs, params_shape,
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"m": m, "v": jax.tree.map(lambda x: x, m), "count": P()}

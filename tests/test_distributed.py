@@ -1,0 +1,101 @@
+"""Multi-device tests (subprocess with forced host device count):
+sharded closures, compressed all-reduce, small-mesh dry-run proxies."""
+import pytest
+
+from util_subproc import run_with_devices
+
+
+def test_sharded_closures_match_dense():
+    out = run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import random_hypergraph, mr_matrix, distinct_thresholds
+from repro.core.distributed import (sharded_maxmin_closure,
+                                    sharded_threshold_closure_mr)
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+h = random_hypergraph(30, 26, seed=3)
+w = h.line_graph(np.int32).astype(np.float32)
+oracle = mr_matrix(h).astype(np.float32)
+for sched in ("allgather", "ring"):
+    got = np.asarray(sharded_maxmin_closure(w, mesh, schedule=sched))
+    assert np.array_equal(got, oracle), sched
+mesh3 = make_test_mesh((1, 2, 2), ("pod", "data", "model"))
+thr = distinct_thresholds(w)
+got = np.asarray(sharded_threshold_closure_mr(w, thr, mesh3))
+assert np.array_equal(got, oracle)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_compressed_allreduce():
+    out = run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.distributed_lm import compressed_allreduce
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((4,), ("data",))
+rng = np.random.default_rng(0)
+tree = {"a": jnp.asarray(rng.normal(size=(4, 33)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(4, 8, 9)).astype(np.float32))}
+out = compressed_allreduce(tree, mesh, "data", block=16)
+for k in tree:
+    want = np.mean(np.asarray(tree[k]), axis=0)
+    got = np.asarray(out[k])
+    # int8 quantization error bound: blockwise absmax / 127 per element
+    err = np.abs(got - want).max()
+    assert err < np.abs(np.asarray(tree[k])).max() / 127 + 1e-6, (k, err)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_small_mesh_dryrun_all_kinds():
+    """Proxy for the 512-device dry-run: tiny configs, 2x2 mesh, all three
+    step kinds lower + compile with the same code path."""
+    out = run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+import dataclasses
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.launch.mesh import make_test_mesh
+from repro.distributed_lm.sharding import (input_structs, shard_params,
+                                           cache_structs, named, batch_axes)
+from repro.train.optimizer import AdamConfig, adam_init, opt_state_specs
+from repro.train.train_step import make_train_step
+from repro.serve.serve_step import make_serve_step, make_prefill_step
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+for arch in ("qwen3_1_7b", "falcon_mamba_7b", "recurrentgemma_2b",
+             "whisper_large_v3", "qwen2_moe_a2_7b"):
+    cfg = dataclasses.replace(get_smoke_config(arch), microbatch=2,
+                              num_patches=4)
+    model = build_model(cfg)
+    with mesh:
+        params = shard_params(model, mesh)
+        opt_cfg = AdamConfig(use_8bit=cfg.opt_8bit)
+        opt_shapes = jax.eval_shape(lambda p: adam_init(p, opt_cfg), params)
+        ospecs = opt_state_specs(model.param_specs(), params, opt_cfg,
+                                 data_size=2, zero1=True)
+        opt = jax.tree.map(
+            lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                   sharding=named(mesh, spec)),
+            opt_shapes, ospecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        batch = input_structs(cfg, mesh, 4, 16)
+        c1 = jax.jit(make_train_step(model, cfg, opt_cfg)).lower(
+            params, opt, batch).compile()
+        c2 = jax.jit(make_prefill_step(model, cfg)).lower(params, batch).compile()
+        cache = cache_structs(model, cfg, mesh, 4, 16, False)
+        toks = jax.ShapeDtypeStruct((4, 1), jnp.int32,
+                                    sharding=named(mesh, P(batch_axes(mesh))))
+        pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=named(mesh, P()))
+        c3 = jax.jit(make_serve_step(model, cfg)).lower(
+            params, cache, toks, pos).compile()
+        assert c1.cost_analysis() is not None
+    print(arch, "OK")
+print("ALLOK")
+""", timeout=560)
+    assert "ALLOK" in out

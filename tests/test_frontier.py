@@ -1,0 +1,42 @@
+"""Sparse frontier engine vs the dense oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (random_hypergraph, planted_chain_hypergraph,
+                        mr_oracle_dense)
+from repro.core.frontier import SparseLineGraph, batched_s_reach, batched_mr
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sreach_matches_oracle(seed):
+    h = random_hypergraph(25, 35, seed=seed)
+    oracle = mr_oracle_dense(h)
+    g = SparseLineGraph(h)
+    rng = np.random.default_rng(seed)
+    us, vs = rng.integers(0, h.n, 30), rng.integers(0, h.n, 30)
+    for s in (1, 2, 4):
+        got = batched_s_reach(g, us, vs, s, rounds=h.m)
+        want = np.array([oracle[u, v] >= s for u, v in zip(us, vs)])
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_mr_bisection_matches_oracle(seed):
+    h = random_hypergraph(25, 35, seed=100 + seed)
+    oracle = mr_oracle_dense(h)
+    g = SparseLineGraph(h)
+    rng = np.random.default_rng(seed)
+    us, vs = rng.integers(0, h.n, 30), rng.integers(0, h.n, 30)
+    got = batched_mr(g, us, vs, rounds=h.m)
+    want = np.array([oracle[u, v] for u, v in zip(us, vs)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_chain_diameter_rounds():
+    """Linear-diameter propagation: a 12-long chain needs ~12 rounds."""
+    h = planted_chain_hypergraph(1, 12, overlap=2, extra_size=2, seed=0)
+    g = SparseLineGraph(h)
+    u = np.array([int(h.edge(0)[0])])
+    v = np.array([int(h.edge(11)[-1])])
+    assert not batched_s_reach(g, u, v, 2, rounds=3)[0]
+    assert batched_s_reach(g, u, v, 2, rounds=12)[0]

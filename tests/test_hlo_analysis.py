@@ -1,0 +1,52 @@
+"""Unit tests for the loop-aware HLO accounting (the §Roofline collective
+term depends on it)."""
+from repro.launch.hlo_analysis import (parse_computations,
+                                       loop_aware_collectives)
+
+_HLO = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %ar = f32[4,8]{1,0} all-reduce(%x), channel_id=1, to_apply=%add
+  ROOT %t = (s32[], f32[4,8]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[4,8])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%inner.2 (p: f32[2,2]) -> f32[2,2] {
+  %ag = f32[2,2]{1,0} all-gather(%y), channel_id=2, dimensions={0}
+  ROOT %r = f32[2,2] add(%ag, %ag)
+}
+
+ENTRY %main.3 (a: f32[4,8]) -> f32[4,8] {
+  %w = (s32[], f32[4,8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  %f = f32[2,2] fusion(%z), kind=kLoop, calls=%inner.2
+  %top = f32[16]{0} reduce-scatter(%q), channel_id=3, dimensions={0}
+  ROOT %out = f32[4,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_computations():
+    comps = parse_computations(_HLO)
+    assert set(comps) == {"body.1", "cond.1", "inner.2", "main.3"}
+    assert comps["main.3"]["entry"]
+    assert comps["body.1"]["coll_bytes"]["all-reduce"] == 4 * 8 * 4
+
+
+def test_loop_aware_multiplies_trip_counts():
+    res = loop_aware_collectives(_HLO)
+    # body AR ×5 (known_trip_count), fusion AG ×1, top-level RS ×1
+    assert res["bytes"]["all-reduce"] == 5 * 4 * 8 * 4
+    assert res["bytes"]["all-gather"] == 2 * 2 * 4
+    assert res["bytes"]["reduce-scatter"] == 16 * 4
+    assert ("body.1", 5) in res["loops"]
+
+
+def test_trip_count_fallback_from_condition():
+    hlo = _HLO.replace(', backend_config={"known_trip_count":{"n":"5"}}', "")
+    res = loop_aware_collectives(hlo)
+    assert res["bytes"]["all-reduce"] == 7 * 4 * 8 * 4   # constant(7) in cond

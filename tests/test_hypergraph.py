@@ -1,0 +1,60 @@
+"""Unit tests: hypergraph structure, compaction, importance order."""
+import numpy as np
+import pytest
+
+from repro.core import (paper_figure1, from_edge_lists, compact,
+                        random_hypergraph)
+
+
+def test_figure1_structure():
+    h = paper_figure1()
+    assert h.n == 12 and h.m == 7
+    assert h.edge_size(1) == 6          # |e2| = 6
+    assert h.edge_size(3) == 4          # |e4| = 4
+    assert h.overlap(1, 4) == 2         # e2 ∩ e5 = {v5, v6}  (Example 2)
+    assert h.overlap(4, 2) == 1         # e5 ∩ e3 = {v10}
+    assert h.overlap(6, 3) == 2         # e7 ∩ e4 = {v3, v4}  (Example 5)
+    assert set(h.edges_of(0).tolist()) == {0, 6}    # E(v1) = {e1, e7}
+    assert h.delta == 6 and h.d_max == 3
+
+
+def test_importance_order_figure1():
+    h = paper_figure1()
+    rank = h.importance_order()
+    # w: e2=34 > e4=23 > e7=22 > e3=e5=e6=12 (id ties) > e1=5
+    order = np.argsort(rank)
+    assert order.tolist() == [1, 3, 6, 2, 4, 5, 0]
+
+
+def test_dual_csr_consistency():
+    h = random_hypergraph(30, 50, seed=1)
+    for e in range(h.m):
+        for v in h.edge(e):
+            assert e in h.edges_of(int(v))
+    for v in range(h.n):
+        for e in h.edges_of(v):
+            assert v in h.edge(int(e))
+
+
+def test_compaction_removes_duplicates():
+    h = from_edge_lists([[0, 1, 2], [2, 3], [0, 1, 2], [3, 4], [2, 3]])
+    g, rep = compact(h)
+    assert g.m == 3
+    assert rep[2] == 0 and rep[4] == 1
+
+
+def test_neighbors_od_matches_dense():
+    h = random_hypergraph(25, 40, seed=2)
+    w = h.line_graph()
+    for e in range(h.m):
+        nb, od = h.neighbors_od(e)
+        dense_nb = np.nonzero(w[e])[0]
+        dense_nb = dense_nb[dense_nb != e]
+        assert np.array_equal(nb, dense_nb)
+        assert np.array_equal(od, w[e, dense_nb])
+
+
+def test_from_edge_lists_dedups_and_sorts():
+    h = from_edge_lists([[3, 1, 3, 2], []])
+    assert h.m == 1
+    assert h.edge(0).tolist() == [1, 2, 3]

@@ -1,0 +1,101 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.maxmin_matmul import maxmin_matmul_pallas
+from repro.kernels.overlap import overlap_pallas
+from repro.kernels.threshold_closure import threshold_step_pallas
+from repro.kernels.label_join import label_join_pallas
+from repro.kernels import maxmin_closure_kernel, threshold_mr_kernel
+from repro.core import (paper_figure1, random_hypergraph, mr_matrix,
+                        distinct_thresholds)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (7, 13, 5), (64, 33, 96),
+                                   (1, 100, 1), (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_maxmin_matmul_sweep(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = jnp.asarray(rng.integers(0, 12, (m, k))).astype(dtype)
+    b = jnp.asarray(rng.integers(0, 12, (k, n))).astype(dtype)
+    got = maxmin_matmul_pallas(a, b, bm=32, bn=32, bk=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.maxmin_matmul_ref(a, b)))
+
+
+@pytest.mark.parametrize("m,n", [(10, 17), (64, 64), (130, 40)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_overlap_sweep(m, n, dtype):
+    rng = np.random.default_rng(m + n)
+    b_inc = jnp.asarray((rng.random((m, n)) < 0.3).astype(np.float32)).astype(dtype)
+    got = overlap_pallas(b_inc, bm=32, bn=32, bk=32, interpret=True)
+    want = ref.overlap_ref(b_inc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.01)
+
+
+@pytest.mark.parametrize("s,m", [(1, 16), (3, 40), (5, 70)])
+def test_threshold_step_sweep(s, m):
+    rng = np.random.default_rng(s * 100 + m)
+    r = jnp.asarray((rng.random((s, m, m)) < 0.15).astype(np.float32))
+    got = threshold_step_pallas(r, bm=32, bn=32, bk=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.threshold_step_ref(r)))
+
+
+@pytest.mark.parametrize("q,l", [(5, 8), (64, 16), (130, 32)])
+def test_label_join_sweep(q, l):
+    rng = np.random.default_rng(q + l)
+    ru = np.sort(rng.integers(0, 60, (q, l)), axis=1).astype(np.int32)
+    rv = np.sort(rng.integers(0, 60, (q, l)), axis=1).astype(np.int32)
+    su = rng.integers(1, 9, (q, l)).astype(np.int32)
+    sv = rng.integers(1, 9, (q, l)).astype(np.int32)
+    got = label_join_pallas(jnp.asarray(ru), jnp.asarray(su), jnp.asarray(rv),
+                            jnp.asarray(sv), bq=32, interpret=True)
+    want = ref.label_join_ref(*map(jnp.asarray, (ru, su, rv, sv)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_closures_match_oracle():
+    h = random_hypergraph(20, 30, seed=5)
+    w = jnp.asarray(h.line_graph(np.int32).astype(np.float32))
+    oracle = mr_matrix(h).astype(np.float32)
+    got_mm = maxmin_closure_kernel(w, bm=16, bn=16, bk=16)
+    np.testing.assert_array_equal(np.asarray(got_mm), oracle)
+    thr = distinct_thresholds(np.asarray(w))
+    got_tc = threshold_mr_kernel(w, thr, bm=16, bn=16, bk=16)
+    np.testing.assert_array_equal(np.asarray(got_tc), oracle)
+
+
+@pytest.mark.parametrize("b,s,h,hd,chunk", [(2, 64, 4, 16, 16),
+                                            (1, 100, 2, 8, 32),
+                                            (3, 33, 1, 128, 16)])
+def test_flash_decode_sweep(b, s, h, hd, chunk):
+    from repro.kernels.flash_decode import flash_decode_pallas
+    rng = np.random.default_rng(b * 100 + s)
+    q = jnp.asarray(rng.normal(size=(b, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    pos = rng.integers(1, s, b)
+    mask = jnp.asarray(np.where(np.arange(s)[None, :] <= pos[:, None],
+                                0.0, -1e30).astype(np.float32))
+    got = flash_decode_pallas(q, k, v, mask, chunk=chunk, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_bf16():
+    from repro.kernels.flash_decode import flash_decode_pallas
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 4, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 48, 4, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 48, 4, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    mask = jnp.zeros((2, 48), jnp.float32)
+    got = flash_decode_pallas(q, k, v, mask, chunk=16, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,137 @@
+"""Algorithm 1/2/3/4/5 correctness vs the semiring oracle + paper goldens."""
+import numpy as np
+import pytest
+
+from repro.core import (paper_figure1, random_hypergraph,
+                        planted_chain_hypergraph, mr_online,
+                        precompute_neighbors, build_basic, build_fast,
+                        minimize, exact_minimize, mr_query, s_reach_query,
+                        mr_oracle_dense, vtv_query, build_ete,
+                        ThresholdComponentIndex, MSTOracle)
+
+
+@pytest.fixture(scope="module")
+def fig1():
+    h = paper_figure1()
+    return h, mr_oracle_dense(h)
+
+
+def test_paper_examples(fig1):
+    h, oracle = fig1
+    assert mr_online(h, 4, 8) == 2          # Example 1: MR(v5, v9) = 2
+    assert mr_online(h, 0, 9) >= 2          # Example 3: v1 ~2~> v10
+    assert mr_online(h, 0, 11) == 2         # Example 4: MR(v1, v12) = 2
+    idx = build_fast(h)
+    assert mr_query(idx, 5, 8) == 2         # Example 7: MR(v6, v9) = 2
+
+
+def test_table2_labels(fig1):
+    """Golden: Table II labels (e-ids 1-based).  v10's (e2, ·) entry is 2,
+    not the paper's printed 1 — provably a typo: Example 3 (MR(v1,v10)=2)
+    is only answerable through hub e2 with min(2, s_v10) = 2."""
+    h, _ = fig1
+    idx = build_fast(h)
+    want = {
+        0: {2: 2, 1: 2, 7: 3}, 1: {2: 1, 1: 2}, 2: {2: 6, 4: 4, 7: 3},
+        3: {2: 6, 4: 4, 7: 3}, 4: {2: 6, 5: 3}, 5: {2: 6, 5: 3},
+        6: {2: 6, 6: 3}, 7: {2: 6, 6: 3}, 8: {2: 2, 3: 3, 6: 3},
+        9: {2: 2, 5: 3, 3: 3}, 10: {2: 2, 4: 4}, 11: {2: 2, 4: 4, 3: 3},
+    }
+    for u in range(h.n):
+        got = {int(e) + 1: int(s) for e, s in
+               zip(idx.labels_edge[u], idx.labels_s[u])}
+        assert got == want[u], f"v{u+1}: {got} != {want[u]}"
+
+
+def test_vtv_overestimates_example5(fig1):
+    h, oracle = fig1
+    assert oracle[0, 11] == 2
+    assert vtv_query(oracle, 0, 11) >= 3    # the false-positive pitfall
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_all_methods_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 35))
+    m = int(rng.integers(8, 45))
+    h = random_hypergraph(n, m, seed=seed)
+    oracle = mr_oracle_dense(h)
+    nc = precompute_neighbors(h)
+    idx_b = build_basic(h)
+    idx_f = build_fast(h)
+    idx_m = minimize(idx_f)
+    idx_e = exact_minimize(idx_f)
+    ete = build_ete(h)
+    tci = ThresholdComponentIndex(h)
+    mst = MSTOracle(h)
+    pairs = rng.integers(0, h.n, (30, 2))
+    for u, v in pairs:
+        u, v = int(u), int(v)
+        o = int(oracle[u, v])
+        assert mr_online(h, u, v, nc) == o
+        assert mr_query(idx_b, u, v) == o
+        assert mr_query(idx_f, u, v) == o
+        assert mr_query(idx_m, u, v) == o
+        assert mr_query(idx_e, u, v) == o
+        assert ete.mr(u, v) == o
+        assert tci.mr(u, v) == o
+        assert mst.mr(u, v) == o
+
+
+def test_planted_chain():
+    h = planted_chain_hypergraph(2, 10, overlap=3, extra_size=2, seed=0)
+    idx = minimize(build_fast(h))
+    first_edge_first_chain = h.edge(0)
+    last_edge_first_chain = h.edge(9)
+    u = int(first_edge_first_chain[0])
+    v = int(last_edge_first_chain[-1])
+    assert mr_query(idx, u, v) == 3
+    # across chains: unreachable
+    other = int(h.edge(10)[0])
+    assert mr_query(idx, u, other) == 0
+
+
+def test_s_reachability_queries():
+    h = paper_figure1()
+    idx = build_fast(h)
+    assert s_reach_query(idx, 4, 8, 2)          # v5 ~2~> v9
+    assert not s_reach_query(idx, 4, 8, 3)      # no 3-walk (Example 1)
+    assert s_reach_query(idx, 0, 9, 2)          # Example 3
+
+
+def test_minimality_necessity():
+    """Every label kept by exact_minimize is necessary: removing it breaks
+    some query.  Algorithm 4 (minimize) stays complete and is measured
+    against the exact pass (its removal order may differ)."""
+    h = random_hypergraph(20, 30, seed=11)
+    oracle = mr_oracle_dense(h)
+    idx = exact_minimize(build_fast(h))
+    # completeness
+    for u in range(h.n):
+        for v in range(h.n):
+            assert mr_query(idx, u, v) == int(oracle[u, v])
+    # necessity: drop each label, expect at least one query to change
+    for u in range(h.n):
+        for j in range(idx.labels_edge[u].size):
+            e = int(idx.labels_edge[u][j])
+            keep = np.arange(idx.labels_edge[u].size) != j
+            saved = (idx.labels_edge[u], idx.labels_rank[u], idx.labels_s[u])
+            idx.labels_edge[u] = idx.labels_edge[u][keep]
+            idx.labels_rank[u] = idx.labels_rank[u][keep]
+            idx.labels_s[u] = idx.labels_s[u][keep]
+            broke = any(mr_query(idx, u, v) != int(oracle[u, v])
+                        for v in range(h.n))
+            idx.labels_edge[u], idx.labels_rank[u], idx.labels_s[u] = saved
+            assert broke, f"label ({u}, e{e}) was removable"
+
+
+def test_minimize_is_complete_and_not_larger():
+    for seed in range(4):
+        h = random_hypergraph(18, 28, seed=100 + seed)
+        oracle = mr_oracle_dense(h)
+        full = build_fast(h)
+        mn = minimize(full)
+        assert mn.num_labels <= full.num_labels
+        for u in range(h.n):
+            for v in range(h.n):
+                assert mr_query(mn, u, v) == int(oracle[u, v])

@@ -1,0 +1,85 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (from_edge_lists, build_fast, minimize, mr_query,
+                        mr_online, mr_oracle_dense, compact, MSTOracle,
+                        threshold_closure_mr, maxmin_closure)
+import jax.numpy as jnp
+
+
+@st.composite
+def hypergraphs(draw, max_v=16, max_e=12):
+    n = draw(st.integers(3, max_v))
+    m = draw(st.integers(1, max_e))
+    edges = []
+    for _ in range(m):
+        size = draw(st.integers(1, min(6, n)))
+        edge = draw(st.lists(st.integers(0, n - 1), min_size=size,
+                             max_size=size, unique=True))
+        edges.append(edge)
+    return from_edge_lists(edges, n=n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hypergraphs())
+def test_mr_symmetry_and_diagonal(h):
+    oracle = mr_oracle_dense(h)
+    # symmetry: u ~s~> v  ==  v ~s~> u  (Sec. II)
+    assert np.array_equal(oracle, oracle.T)
+    # MR(u, u) = max |e| over e ∋ u  (single-hyperedge walk, Corollary 1)
+    for u in range(h.n):
+        eu = h.edges_of(u)
+        want = int(h.edge_sizes[eu].max()) if eu.size else 0
+        assert oracle[u, u] == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(hypergraphs())
+def test_index_complete_vs_oracle(h):
+    oracle = mr_oracle_dense(h)
+    idx = minimize(build_fast(h))
+    for u in range(h.n):
+        for v in range(h.n):
+            assert mr_query(idx, u, v) == int(oracle[u, v])
+
+
+@settings(max_examples=15, deadline=None)
+@given(hypergraphs())
+def test_online_matches_mst(h):
+    mst = MSTOracle(h)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        u, v = int(rng.integers(h.n)), int(rng.integers(h.n))
+        assert mr_online(h, u, v) == mst.mr(u, v)
+
+
+@settings(max_examples=15, deadline=None)
+@given(hypergraphs())
+def test_closure_methods_agree(h):
+    w = jnp.asarray(h.line_graph(np.int32))
+    a = np.asarray(maxmin_closure(w))
+    b = np.asarray(threshold_closure_mr(w)).astype(a.dtype)
+    assert np.array_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(hypergraphs())
+def test_compaction_preserves_mr(h):
+    g, _ = compact(h)
+    a = mr_oracle_dense(h)
+    b = mr_oracle_dense(g)
+    assert np.array_equal(a, b)     # same vertex set; dup edges removable
+
+
+@settings(max_examples=10, deadline=None)
+@given(hypergraphs(), st.integers(0, 15), st.integers(0, 15))
+def test_adding_hyperedge_is_monotone(h, ua, ub):
+    """Adding a hyperedge can only increase MR values."""
+    ua, ub = ua % h.n, ub % h.n
+    before = mr_oracle_dense(h)
+    edges = [h.edge(e).tolist() for e in range(h.m)] + [[ua, ub]]
+    h2 = from_edge_lists(edges, n=h.n)
+    after = mr_oracle_dense(h2)
+    assert (after >= before).all()

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system: the full pipeline
+(build -> minimize -> batched serve) on a nontrivial graph, the epidemic
+case-study workflow (Exp-5), and the data-pipeline integration."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (colocation_hypergraph, random_hypergraph, compact,
+                        build_fast, minimize, PaddedIndex, mr_query,
+                        mr_oracle_dense, mr_matrix, vertex_mr_from_edge_mr,
+                        threshold_closure_mr, distinct_thresholds)
+
+
+def test_end_to_end_pipeline():
+    """graph -> compaction -> fast construction -> minimal index ->
+    batched device queries == oracle."""
+    h0 = random_hypergraph(60, 90, min_size=2, max_size=7, seed=42)
+    h, _ = compact(h0)
+    idx = minimize(build_fast(h))
+    oracle = mr_oracle_dense(h)
+    pidx = PaddedIndex(idx)
+    rng = np.random.default_rng(0)
+    us, vs = rng.integers(0, h.n, 500), rng.integers(0, h.n, 500)
+    got = np.asarray(pidx.mr(us, vs))
+    want = np.array([oracle[u, v] for u, v in zip(us, vs)])
+    np.testing.assert_array_equal(got, want)
+    # index is no larger than the full one and much smaller than O(n*m)
+    assert idx.num_labels <= build_fast(h).num_labels <= h.n * h.m
+
+
+def test_epidemic_case_study_workflow():
+    """Exp-5 analog: co-location hypergraph; risk = MR to the index case."""
+    h = colocation_hypergraph(n_people=80, n_places=6, n_days=12,
+                              p_checkin=0.05, seed=7)
+    if h.m == 0:
+        pytest.skip("degenerate random draw")
+    idx = minimize(build_fast(h))
+    oracle = mr_oracle_dense(h)
+    patient_zero = int(np.argmax(h.vertex_degrees))
+    pidx = PaddedIndex(idx)
+    everyone = np.arange(h.n)
+    risk = np.asarray(pidx.mr(np.full(h.n, patient_zero), everyone))
+    want = oracle[patient_zero]
+    np.testing.assert_array_equal(risk, want)
+    # risk to self is the max co-location group size
+    assert risk[patient_zero] == int(
+        h.edge_sizes[h.edges_of(patient_zero)].max())
+
+
+def test_semiring_vertex_queries_match_index():
+    h = random_hypergraph(30, 45, seed=17)
+    w_star = mr_matrix(h)
+    idx = build_fast(h)
+    rng = np.random.default_rng(3)
+    us, vs = rng.integers(0, h.n, 50), rng.integers(0, h.n, 50)
+    got = vertex_mr_from_edge_mr(h, w_star, us, vs)
+    want = np.array([mr_query(idx, int(u), int(v)) for u, v in zip(us, vs)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bucketized_thresholds_lower_bound():
+    """Coarse threshold ladders give exact-or-lower MR (the approximate
+    mode for huge delta; DESIGN.md section 2)."""
+    h = random_hypergraph(25, 40, seed=23)
+    w = jnp.asarray(h.line_graph(np.int32))
+    exact = np.asarray(threshold_closure_mr(w))
+    thr = distinct_thresholds(np.asarray(w))
+    coarse = np.asarray(threshold_closure_mr(w, thr[::2]))
+    assert (coarse <= exact).all()
+    # and exact where the value is in the coarse ladder
+    mask = np.isin(exact, thr[::2])
+    np.testing.assert_array_equal(coarse[mask], exact[mask])
