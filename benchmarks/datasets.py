@@ -26,6 +26,9 @@ BENCH_DATASETS: Dict[str, Tuple[str, int, int, int, int, int]] = {
     "PS-s": ("primary-school (242/12.7k, η=126)", 120, 2500, 2, 5, 4),
     "EE-s": ("email-Eu (998/25.8k, η=85)", 400, 4000, 2, 6, 5),
     "WA-s": ("walmart-trips (89k/70k, η=5)", 4000, 3200, 2, 8, 6),
+    # small enough that every registry backend (incl. the dense closure)
+    # can be built and cross-validated in the engine suite
+    "ENG-s": ("engine-suite synthetic (all backends)", 200, 256, 2, 6, 7),
 }
 
 

@@ -16,15 +16,13 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import (Hypergraph, from_edge_lists, mr_online,
-                        precompute_neighbors, build_basic, build_fast,
-                        minimize, exact_minimize, mr_query, PaddedIndex,
-                        build_ete, ThresholdComponentIndex, MSTOracle,
-                        mr_oracle_dense)
+from repro.api import available_backends, build_engine
+from repro.core import (Hypergraph, from_edge_lists, build_basic, build_fast,
+                        minimize, exact_minimize, precompute_neighbors)
 from .datasets import BENCH_DATASETS, make_dataset
 
 __all__ = ["exp1_query_time", "exp2_indexing_time", "exp3_space",
-           "exp4_scalability", "exp5_case_study"]
+           "exp4_scalability", "exp5_case_study", "engine_suite"]
 
 
 def _timeit(fn: Callable, *, reps: int = 1) -> float:
@@ -41,23 +39,31 @@ def _query_pairs(h: Hypergraph, k: int = 1000, seed: int = 0):
 
 def exp1_query_time(dataset: str = "BK-s", n_q: int = 1000,
                     include_online: bool = True) -> List[Tuple[str, float, str]]:
-    """Total time for n_q MR queries per method (paper Fig. 2)."""
+    """Total time for n_q MR queries per method (paper Fig. 2).
+
+    Every method is built and queried through the ``repro.api`` facade —
+    the paper's method names map onto registry backends:
+    Base/Base* -> "online", ETE-reach -> "ete", TCI -> "threshold",
+    VTE-reach -> "hl-index" (unminimized), Min-reach -> "hl-index",
+    Min-batched-jax -> its device snapshot, Sparse-frontier -> "frontier".
+    """
     h = make_dataset(dataset)
     us, vs = _query_pairs(h, n_q)
     rows = []
 
-    idx = build_fast(h)
-    mn = minimize(idx)
-    ete = build_ete(h)
-    tci = ThresholdComponentIndex(h)
-    nc = precompute_neighbors(h)
+    vte = build_engine(h, "hl-index", minimize_labels=False)
+    mn = build_engine(h, "hl-index", index=vte.idx)   # reuse construction
+    ete = build_engine(h, "ete")
+    tci = build_engine(h, "threshold")
 
     if include_online:
         sub = min(n_q, 50)              # online is orders slower; extrapolate
-        t = _timeit(lambda: [mr_online(h, int(u), int(v))
+        base = build_engine(h, "online", precompute=False)
+        base_star = build_engine(h, "online")
+        t = _timeit(lambda: [base.mr(int(u), int(v))
                              for u, v in zip(us[:sub], vs[:sub])])
         rows.append((f"exp1.{dataset}.Base", t / sub * 1e6, "per-query-us"))
-        t = _timeit(lambda: [mr_online(h, int(u), int(v), nc)
+        t = _timeit(lambda: [base_star.mr(int(u), int(v))
                              for u, v in zip(us[:sub], vs[:sub])])
         rows.append((f"exp1.{dataset}.Base*", t / sub * 1e6, "per-query-us"))
 
@@ -65,30 +71,57 @@ def exp1_query_time(dataset: str = "BK-s", n_q: int = 1000,
     rows.append((f"exp1.{dataset}.ETE-reach", t / n_q * 1e6, "per-query-us"))
     t = _timeit(lambda: [tci.mr(int(u), int(v)) for u, v in zip(us, vs)])
     rows.append((f"exp1.{dataset}.TCI(HypED-like)", t / n_q * 1e6, "per-query-us"))
-    t = _timeit(lambda: [mr_query(idx, int(u), int(v))
-                         for u, v in zip(us, vs)])
+    t = _timeit(lambda: [vte.mr(int(u), int(v)) for u, v in zip(us, vs)])
     rows.append((f"exp1.{dataset}.VTE-reach", t / n_q * 1e6, "per-query-us"))
-    t = _timeit(lambda: [mr_query(mn, int(u), int(v))
-                         for u, v in zip(us, vs)])
+    t = _timeit(lambda: [mn.mr(int(u), int(v)) for u, v in zip(us, vs)])
     rows.append((f"exp1.{dataset}.Min-reach", t / n_q * 1e6, "per-query-us"))
 
-    pidx = PaddedIndex(mn)
-    import jax
-    f = jax.jit(lambda u, v: pidx.mr(u, v))
-    _ = np.asarray(f(us, vs))           # compile
-    t = _timeit(lambda: np.asarray(f(us, vs)), reps=5)
+    snap = mn.snapshot()
+    _ = np.asarray(snap.mr(us, vs))     # compile
+    t = _timeit(lambda: np.asarray(snap.mr(us, vs)), reps=5)
     rows.append((f"exp1.{dataset}.Min-batched-jax", t / n_q * 1e6,
                  "per-query-us"))
 
     # index-free sparse frontier engine (for graphs beyond dense scale)
-    from repro.core.frontier import SparseLineGraph, batched_mr
-    g = SparseLineGraph(h)
+    fr = build_engine(h, "frontier", rounds=min(h.m, 64))
     sub = min(n_q, 100)
-    _ = batched_mr(g, us[:4], vs[:4], rounds=min(h.m, 64))   # compile
-    t = _timeit(lambda: batched_mr(g, us[:sub], vs[:sub],
-                                   rounds=min(h.m, 64)))
+    _ = fr.mr_batch(us[:4], vs[:4])                          # compile
+    t = _timeit(lambda: fr.mr_batch(us[:sub], vs[:sub]))
     rows.append((f"exp1.{dataset}.Sparse-frontier", t / sub * 1e6,
                  "per-query-us"))
+    return rows
+
+
+def engine_suite(dataset: str = "ENG-s",
+                 n_q: int = 128) -> List[Tuple[str, float, str]]:
+    """Every registered backend through the one facade: build time, batched
+    query time, and a cross-validation bit against the "mst-oracle"
+    reference answers (1.0 = identical on all n_q pairs)."""
+    h = make_dataset(dataset)
+    us, vs = _query_pairs(h, n_q, seed=13)
+    want = build_engine(h, "mst-oracle").mr_batch(us, vs).astype(np.int64)
+    rows: List[Tuple[str, float, str]] = []
+    for backend in available_backends():
+        # no rounds cap for frontier: the agreement assert needs exactness
+        t0 = time.perf_counter()
+        eng = build_engine(h, backend)
+        t_build = time.perf_counter() - t0
+        _ = eng.mr_batch(us, vs)          # compile/warm at the timed shape
+        t0 = time.perf_counter()
+        got = np.asarray(eng.mr_batch(us, vs))
+        t_q = time.perf_counter() - t0
+        agrees = np.array_equal(got.astype(np.int64), want)
+        if not agrees:
+            raise AssertionError(
+                f"backend {backend!r} disagrees with mst-oracle on "
+                f"{dataset} ({int((got.astype(np.int64) != want).sum())}"
+                f"/{n_q} mismatches)")
+        rows.append((f"engine.{dataset}.{backend}.build", t_build * 1e6,
+                     "total-us"))
+        rows.append((f"engine.{dataset}.{backend}.batch-query",
+                     t_q / n_q * 1e6, "per-query-us"))
+        rows.append((f"engine.{dataset}.{backend}.agrees-with-oracle",
+                     float(agrees), "bool"))
     return rows
 
 
@@ -150,11 +183,10 @@ def exp4_scalability(dataset: str = "WA-s") -> List[Tuple[str, float, str]]:
 
 def exp5_case_study() -> List[Tuple[str, float, str]]:
     h = make_dataset("COLO")
-    idx = minimize(build_fast(h))
-    pidx = PaddedIndex(idx)
+    snap = build_engine(h, "hl-index").snapshot()
     patient_zero = int(np.argmax(h.vertex_degrees))
     others = np.arange(h.n)
-    risk = np.asarray(pidx.mr(np.full(h.n, patient_zero), others))
+    risk = np.asarray(snap.mr(np.full(h.n, patient_zero), others))
     rows = [
         ("exp5.colo.n-people", h.n, "count"),
         ("exp5.colo.n-groups", h.m, "count"),

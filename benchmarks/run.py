@@ -35,6 +35,9 @@ def main() -> None:
         rows += pt.exp4_scalability("WA-s")
     # Exp-5: case study (Fig. 4)
     rows += pt.exp5_case_study()
+    # unified engine API: every registered backend built, benchmarked and
+    # cross-validated through the repro.api facade
+    rows += pt.engine_suite("ENG-s", n_q=64 if args.quick else 128)
     # kernel/closure layer
     rows += kb.closure_bench(m=256 if args.quick else 512)
 

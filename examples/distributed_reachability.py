@@ -11,7 +11,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import random_hypergraph, mr_matrix, distinct_thresholds
+from repro.api import build_engine, random_hypergraph
+from repro.core import distinct_thresholds, vertex_mr_from_edge_mr
 from repro.core.distributed import (sharded_maxmin_closure,
                                     sharded_threshold_closure_mr,
                                     collective_bytes_of, sharded_maxmin_round,
@@ -28,7 +29,10 @@ def main():
     w = h.line_graph(np.int32).astype(np.float32)
     print(f"hypergraph: n={h.n} m={h.m}; line graph {w.shape}")
 
-    dense = mr_matrix(h).astype(np.float32)
+    # the facade's closure backend is the single-device reference: its W*
+    # is exactly what the sharded closures must reproduce
+    closure_eng = build_engine(h, backend="closure")
+    dense = closure_eng.w_star.astype(np.float32)
 
     for sched in ("allgather", "ring"):
         t0 = time.perf_counter()
@@ -44,6 +48,15 @@ def main():
     dt = time.perf_counter() - t0
     print(f"threshold closure (S={thr.size} over pod axis) on 2x2x2: "
           f"{dt:.2f}s  correct={np.array_equal(got, dense)}")
+
+    # vertex-level spot check: sharded closure answers == hl-index engine
+    # answers, both through the unified query surface
+    rng = np.random.default_rng(0)
+    us, vs = rng.integers(0, h.n, 256), rng.integers(0, h.n, 256)
+    from_sharded = vertex_mr_from_edge_mr(h, got, us, vs).astype(np.int64)
+    hl = build_engine(h, backend="hl-index")
+    print("sharded closure == hl-index engine on 256 vertex queries:",
+          np.array_equal(from_sharded, hl.mr_batch(us, vs).astype(np.int64)))
 
     # what goes over the wire per round
     from jax.sharding import NamedSharding, PartitionSpec as P

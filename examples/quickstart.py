@@ -1,4 +1,4 @@
-"""Quickstart: build an HL-index, answer max-reachability queries.
+"""Quickstart: one API surface for every reachability backend.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,58 +6,54 @@ import time
 
 import numpy as np
 
-from repro.core import (paper_figure1, random_hypergraph, compact,
-                        build_fast, minimize, mr_query, s_reach_query,
-                        mr_online, PaddedIndex)
+from repro.api import (build_engine, available_backends, plan_backend,
+                       paper_figure1, random_hypergraph, compact)
 
 
 def main():
     # --- the paper's running example (Figure 1) ---------------------------
     h = paper_figure1()
-    idx = build_fast(h)
+    eng = build_engine(h, backend="hl-index")
     print("Figure-1 hypergraph:", h.stats())
-    print("MR(v5, v9)  =", mr_query(idx, 4, 8), " (paper Example 1: 2)")
-    print("MR(v1, v12) =", mr_query(idx, 0, 11), "(paper Example 4: 2)")
-    print("v1 ~2~> v10 ?", s_reach_query(idx, 0, 9, 2), "(paper Example 3: True)")
+    print("MR(v5, v9)  =", eng.mr(4, 8), " (paper Example 1: 2)")
+    print("MR(v1, v12) =", eng.mr(0, 11), "(paper Example 4: 2)")
+    print("v1 ~2~> v10 ?", eng.s_reach(0, 9, 2), "(paper Example 3: True)")
 
-    # --- a bigger graph: construct, minimize, serve -----------------------
+    # --- a bigger graph: build once, serve through the same surface -------
     h = random_hypergraph(3000, 4500, min_size=2, max_size=8, seed=0)
     h, _ = compact(h)
     t0 = time.perf_counter()
-    full = build_fast(h)
+    eng = build_engine(h, backend="hl-index")
     t_build = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    mini = minimize(full)
-    t_min = time.perf_counter() - t0
-    print(f"\nn={h.n} m={h.m}: Construct {t_build:.2f}s "
-          f"({full.num_labels} labels), +minimize {t_min:.2f}s "
-          f"({mini.num_labels} labels)")
+    print(f"\nn={h.n} m={h.m}: hl-index build {t_build:.2f}s "
+          f"({eng.nbytes()} bytes); planner would pick "
+          f"{plan_backend(h, batch_hint=10_000)!r} for this shape")
 
     rng = np.random.default_rng(0)
     us, vs = rng.integers(0, h.n, 10000), rng.integers(0, h.n, 10000)
 
-    # online vs index on a few queries
+    # online (index-free) vs hl-index on a few queries — same protocol
+    online = build_engine(h, backend="online")
     t0 = time.perf_counter()
-    online_ans = [mr_online(h, int(u), int(v)) for u, v in zip(us[:20], vs[:20])]
+    online_ans = [online.mr(int(u), int(v)) for u, v in zip(us[:20], vs[:20])]
     t_online = (time.perf_counter() - t0) / 20
     t0 = time.perf_counter()
-    idx_ans = [mr_query(mini, int(u), int(v)) for u, v in zip(us[:20], vs[:20])]
+    idx_ans = [eng.mr(int(u), int(v)) for u, v in zip(us[:20], vs[:20])]
     t_idx = (time.perf_counter() - t0) / 20
     assert online_ans == idx_ans
     print(f"per-query: online {t_online*1e3:.2f} ms  vs  "
-          f"Min-reach {t_idx*1e6:.1f} us  ({t_online/t_idx:.0f}x)")
+          f"hl-index {t_idx*1e6:.1f} us  ({t_online/t_idx:.0f}x)")
 
-    # the batched device engine: 10k queries in one XLA program
-    pidx = PaddedIndex(mini)
-    import jax
-    f = jax.jit(pidx.mr)
-    ans = np.asarray(f(us, vs))           # includes compile
+    # the device snapshot: 10k queries in one fused XLA program
+    snap = eng.snapshot()
+    ans = np.asarray(snap.mr(us, vs))     # includes compile
     t0 = time.perf_counter()
-    ans = np.asarray(f(us, vs))
+    ans = np.asarray(snap.mr(us, vs))
     t_batch = time.perf_counter() - t0
-    print(f"batched engine: 10,000 queries in {t_batch*1e3:.1f} ms "
+    print(f"device snapshot: 10,000 queries in {t_batch*1e3:.1f} ms "
           f"({t_batch/len(us)*1e9:.0f} ns/query); "
           f"max MR in batch = {ans.max()}")
+    print("registered backends:", ", ".join(available_backends()))
 
 
 if __name__ == "__main__":

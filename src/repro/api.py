@@ -1,0 +1,35 @@
+"""Public facade for hypergraph reachability — the one import surface.
+
+    from repro.api import build_engine, random_hypergraph
+
+    h = random_hypergraph(1000, 1500)
+    eng = build_engine(h, backend="auto", batch_hint=10_000)
+    eng.mr(u, v)                     # scalar max-reachability
+    eng.s_reach(u, v, s)             # scalar s-reachability
+    eng.mr_batch(us, vs)             # [Q] vectorized
+    snap = eng.snapshot()            # device-resident padded form
+    snap.mr(us, vs)                  # fused XLA batch join
+
+Every backend (see ``available_backends()``) answers through the same
+``ReachabilityEngine`` protocol; ``backend="auto"`` lets the planner pick.
+Examples, benchmarks, and the cross-validation suite all route through
+this module, so a new backend is one ``register_backend`` entry away from
+being benchmarked and validated.
+"""
+from __future__ import annotations
+
+from repro.core.engine import (ReachabilityEngine, DeviceSnapshot,
+                               SnapshotUnsupported, available_backends,
+                               plan_backend, register_backend)
+from repro.core.engine import build as build_engine
+from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
+                                   random_hypergraph,
+                                   planted_chain_hypergraph,
+                                   colocation_hypergraph, paper_figure1)
+
+__all__ = [
+    "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
+    "build_engine", "available_backends", "plan_backend", "register_backend",
+    "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
+    "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
+]

@@ -1,5 +1,14 @@
 """Core library: the paper's contribution (HL-index max-reachability in
-hypergraphs) plus its (max, min)-semiring TPU re-expression."""
+hypergraphs) plus its (max, min)-semiring TPU re-expression.
+
+Naming note: ``batched_mr`` is the HL-index label-join engine
+(query.py).  The sparse frontier-sweep engine exports
+``frontier_batched_mr`` / ``frontier_batched_s_reach`` (frontier.py) —
+historically the frontier one shadowed the label-join one under the same
+name; ``batched_s_reach`` survives only as a deprecated alias.  New code
+should go through the unified facade in ``repro.api`` /
+``repro.core.engine`` instead of either raw function.
+"""
 from .hypergraph import (Hypergraph, from_edge_lists, compact,
                          random_hypergraph, planted_chain_hypergraph,
                          colocation_hypergraph, paper_figure1)
@@ -14,7 +23,11 @@ from .semiring import (maxmin_matmul, maxmin_closure, boolean_closure,
 from .baselines import (vtv_query, ETEIndex, build_ete,
                         ThresholdComponentIndex, MSTOracle, line_graph_edges)
 from .maintenance import insert_hyperedge, delete_hyperedge, component_of
-from .frontier import SparseLineGraph, batched_s_reach, batched_mr
+from .frontier import (SparseLineGraph, frontier_batched_s_reach,
+                       frontier_batched_mr)
+from .engine import (ReachabilityEngine, DeviceSnapshot, SnapshotUnsupported,
+                     register_backend, available_backends, plan_backend)
+from .engine import build as build_engine
 
 __all__ = [
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
@@ -28,5 +41,20 @@ __all__ = [
     "vtv_query", "ETEIndex", "build_ete", "ThresholdComponentIndex",
     "MSTOracle", "line_graph_edges",
     "insert_hyperedge", "delete_hyperedge", "component_of",
-    "SparseLineGraph", "batched_s_reach", "batched_mr",
+    "SparseLineGraph", "frontier_batched_s_reach", "frontier_batched_mr",
+    "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
+    "register_backend", "available_backends", "plan_backend", "build_engine",
 ]
+
+
+def __getattr__(name: str):
+    # deprecated alias: `batched_s_reach` always meant the frontier sweep
+    # (the label-join engine never had an s_reach batch entry point).
+    if name == "batched_s_reach":
+        import warnings
+        warnings.warn(
+            "repro.core.batched_s_reach is deprecated; use "
+            "frontier_batched_s_reach (or repro.api.build_engine)",
+            DeprecationWarning, stacklevel=2)
+        return frontier_batched_s_reach
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = [
     "pad_for_mesh", "sharded_maxmin_round", "sharded_maxmin_closure",
     "sharded_threshold_closure_mr", "collective_bytes_of",
@@ -96,7 +98,7 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
                 row_panel = jax.lax.all_gather(blk, col_ax, axis=1, tiled=True)
                 col_panel = jax.lax.all_gather(blk, row_ax, axis=0, tiled=True)
                 return jnp.maximum(blk, _local_maxmin(row_panel, col_panel))
-            return jax.shard_map(body, mesh=mesh, in_specs=spec,
+            return shard_map(body, mesh=mesh, in_specs=spec,
                                  out_specs=spec)(r)
         return round_fn
 
@@ -125,7 +127,7 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
                 (acc, _), _ = jax.lax.scan(step, (blk, blk),
                                            jnp.arange(n_row))
                 return acc
-            return jax.shard_map(body, mesh=mesh, in_specs=spec,
+            return shard_map(body, mesh=mesh, in_specs=spec,
                                  out_specs=spec)(r)
         return round_fn
 
@@ -179,7 +181,7 @@ def sharded_threshold_closure_mr(w, thresholds, mesh: Mesh, *,
         prod = jax.lax.batch_matmul(row_panel, col_panel)
         return (prod > 0).astype(blk.dtype)
 
-    round_fn = jax.jit(jax.shard_map(round_body, mesh=mesh,
+    round_fn = jax.jit(shard_map(round_body, mesh=mesh,
                                      in_specs=batch_spec, out_specs=batch_spec))
     for _ in range(n_rounds):
         r = round_fn(r)

@@ -1,0 +1,441 @@
+"""Unified reachability engine API: one query surface, pluggable backends.
+
+The repo ships several ways to answer the paper's two query problems —
+``MR(u, v)`` (Problem 2, Algorithm 5) and ``u ~s~> v`` (Problem 1) — each
+grown with its own build/query signature: the HL-index merge-join
+(query.py), the padded JAX batch engine (``PaddedIndex``), the sparse
+line-graph frontier sweeps (frontier.py), the online bidirectional search
+(online.py), and the baseline oracles (baselines.py).  This module folds
+them all behind one protocol:
+
+    engine = build(h, backend="hl-index")     # or "auto"
+    engine.mr(u, v)                           # scalar MR
+    engine.s_reach(u, v, s)                   # scalar s-reachability
+    engine.mr_batch(us, vs)                   # [Q] MR, vectorized
+    engine.s_reach_batch(us, vs, s)           # [Q] bool
+    engine.snapshot()                         # device-resident padded form
+
+Backends register themselves under a string key (``register_backend``);
+``build(h, backend="auto")`` consults a planner that picks a backend from
+the graph size, the label mass, and the expected query batch shape.
+Adding a new structure (a HypED-style threshold oracle, a sharded device
+engine, ...) is one registry entry — not a new public API.
+
+``DeviceSnapshot`` generalizes ``HLIndex.as_padded``: any backend that can
+express its structure as per-vertex sorted (hub, s) label rows exports the
+same padded tensors, and every snapshot is served by the same fused
+``batched_mr`` join.  Backends with no label form (online search, frontier
+sweeps, union-find components, the MST forest) raise
+``SnapshotUnsupported`` — their batch paths run through their own engines.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+from .hlindex import HLIndex, build_basic, build_fast, pad_label_rows
+from .minimal import minimize
+from .query import DeviceSnapshot, mr_query, s_reach_query
+from .online import NeighborCache, mr_online
+from .frontier import (SparseLineGraph, frontier_batched_mr,
+                       frontier_batched_s_reach)
+from .baselines import (ETEIndex, MSTOracle, ThresholdComponentIndex,
+                        build_ete)
+from .semiring import mr_matrix, vertex_mr_from_edge_mr
+
+__all__ = [
+    "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
+    "register_backend", "available_backends", "plan_backend", "build",
+    "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
+    "ThresholdEngine", "MSTOracleEngine", "ClosureEngine",
+]
+
+class SnapshotUnsupported(NotImplementedError):
+    """Raised by backends whose structure has no padded label form."""
+
+
+# ---------------------------------------------------------------------------
+# Protocol + shared scaffolding
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ReachabilityEngine(Protocol):
+    """The one query surface every backend serves."""
+
+    name: str
+
+    def mr(self, u: int, v: int) -> int: ...
+    def s_reach(self, u: int, v: int, s: int) -> bool: ...
+    def mr_batch(self, us, vs) -> np.ndarray: ...
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray: ...
+    def snapshot(self) -> DeviceSnapshot: ...
+
+
+class _EngineBase:
+    """Default implementations: scalar fallbacks and mr-derived s-reach.
+
+    Backends override whichever paths their structure accelerates; the
+    semantics (``s_reach(u, v, s) == (mr(u, v) >= s)``) are fixed here so
+    every backend answers identically.
+    """
+
+    name = "base"
+
+    def __init__(self, h: Hypergraph):
+        self.h = h
+
+    @classmethod
+    def build(cls, h: Hypergraph, **opts) -> "ReachabilityEngine":
+        raise NotImplementedError
+
+    def mr(self, u: int, v: int) -> int:
+        raise NotImplementedError
+
+    def s_reach(self, u: int, v: int, s: int) -> bool:
+        return self.mr(u, v) >= s
+
+    def mr_batch(self, us, vs) -> np.ndarray:
+        return np.array([self.mr(int(u), int(v)) for u, v in zip(us, vs)],
+                        np.int64)
+
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        return self.mr_batch(us, vs) >= s
+
+    def snapshot(self) -> DeviceSnapshot:
+        raise SnapshotUnsupported(
+            f"backend {self.name!r} has no padded device form; query it "
+            f"through mr_batch / s_reach_batch instead")
+
+    def nbytes(self) -> Optional[int]:
+        """Resident index size in bytes, if the backend tracks one."""
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_backend(name: str, builder: Optional[Callable] = None):
+    """Register ``builder`` (a class with ``.build(h, **opts)``) under
+    ``name``.  Usable as a decorator: ``@register_backend("hl-index")``."""
+    def deco(cls):
+        _REGISTRY[name] = cls
+        return cls
+    if builder is not None:
+        return deco(builder)
+    return deco
+
+
+def available_backends() -> List[str]:
+    """Sorted registry keys (excludes the virtual ``"auto"``)."""
+    return sorted(_REGISTRY)
+
+
+def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None) -> str:
+    """Pick a backend from graph size, label mass, and query batch shape.
+
+    Policy (documented in README.md):
+      * tiny line graphs with real batches -> dense semiring ``closure``
+        (one fused device program, no per-root host traversal);
+      * anything where HL-index construction is tractable -> ``hl-index``
+        (the paper's answer: microsecond merge-joins, batch via snapshot);
+      * huge graphs, batched workload -> ``frontier`` (index-free sparse
+        sweeps; build cost is one line-graph pass);
+      * huge graphs, trickle queries -> ``online`` (no build at all).
+    """
+    q = int(batch_hint) if batch_hint else 0
+    if h.m == 0:
+        return "hl-index"
+    if h.m <= 256 and q >= 64:
+        return "closure"
+    # label mass proxy: construction walks ~nnz * avg-degree host work
+    if h.nnz * max(float(h.vertex_degrees.mean()) if h.n else 0.0, 1.0) <= 2e6:
+        return "hl-index"
+    if q >= 256:
+        return "frontier"
+    return "online"
+
+
+def build(h: Hypergraph, backend: str = "auto", *,
+          batch_hint: Optional[int] = None, **opts) -> "ReachabilityEngine":
+    """Build a reachability engine over ``h``.
+
+    ``backend`` is a registry key or ``"auto"``; ``batch_hint`` tells the
+    planner the expected query batch size.  Backend-specific options pass
+    through ``**opts`` (e.g. ``minimize_labels=False`` for "hl-index").
+    """
+    if backend == "auto":
+        backend = plan_backend(h, batch_hint)
+    try:
+        cls = _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; available: {available_backends()}"
+        ) from None
+    return cls.build(h, **opts)
+
+
+# ---------------------------------------------------------------------------
+# HL-index backends (the paper's structure)
+# ---------------------------------------------------------------------------
+
+@register_backend("hl-index")
+class HLIndexEngine(_EngineBase):
+    """Algorithm 3 (+ Algorithm 4 minimization) served by Algorithm 5
+    merge-joins; batches run on the padded device snapshot."""
+
+    name = "hl-index"
+
+    def __init__(self, h: Hypergraph, idx: HLIndex):
+        super().__init__(h)
+        self.idx = idx
+        self._snap: Optional[DeviceSnapshot] = None
+
+    @classmethod
+    def build(cls, h: Hypergraph, *, minimize_labels: bool = True,
+              index: Optional[HLIndex] = None) -> "HLIndexEngine":
+        """``index`` reuses a prebuilt (unminimized) HL-index instead of
+        running construction again — e.g. to derive the minimized engine
+        from an ablation engine's labels."""
+        idx = index if index is not None else build_fast(h)
+        if minimize_labels:
+            idx = minimize(idx)
+        return cls(h, idx)
+
+    def mr(self, u: int, v: int) -> int:
+        return mr_query(self.idx, int(u), int(v))
+
+    def s_reach(self, u: int, v: int, s: int) -> bool:
+        return s_reach_query(self.idx, int(u), int(v), int(s))
+
+    def mr_batch(self, us, vs) -> np.ndarray:
+        return np.asarray(self.snapshot().mr(us, vs))
+
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+
+    def snapshot(self) -> DeviceSnapshot:
+        if self._snap is None:
+            self._snap = DeviceSnapshot.from_hlindex(self.idx, self.name)
+        return self._snap
+
+    def nbytes(self) -> int:
+        return self.idx.nbytes()
+
+
+@register_backend("hl-index-basic")
+class HLIndexBasicEngine(HLIndexEngine):
+    """Algorithm 2 construction (no MCD/neighbor-index pruning, no
+    minimization) — the ablation baseline, same query paths."""
+
+    name = "hl-index-basic"
+
+    @classmethod
+    def build(cls, h: Hypergraph, *,
+              cover_check: bool = True) -> "HLIndexBasicEngine":
+        return cls(h, build_basic(h, cover_check=cover_check))
+
+
+# ---------------------------------------------------------------------------
+# Index-free backends
+# ---------------------------------------------------------------------------
+
+@register_backend("online")
+class OnlineEngine(_EngineBase):
+    """Algorithm 1 bidirectional search (the paper's Base*); zero build
+    cost beyond the optional neighbor cache."""
+
+    name = "online"
+
+    def __init__(self, h: Hypergraph, cache: Optional[NeighborCache]):
+        super().__init__(h)
+        self.cache = cache
+
+    @classmethod
+    def build(cls, h: Hypergraph, *, precompute: bool = True) -> "OnlineEngine":
+        return cls(h, NeighborCache(h) if precompute else None)
+
+    def mr(self, u: int, v: int) -> int:
+        return mr_online(self.h, int(u), int(v), self.cache)
+
+    def nbytes(self) -> Optional[int]:
+        return self.cache.nbytes() if self.cache is not None else 0
+
+
+@register_backend("frontier")
+class FrontierEngine(_EngineBase):
+    """Index-free sparse line-graph frontier sweeps — the batch path for
+    graphs beyond dense-closure scale.  ``rounds`` bounds propagation
+    (None = |E|, exact)."""
+
+    name = "frontier"
+
+    def __init__(self, h: Hypergraph, g: SparseLineGraph,
+                 rounds: Optional[int]):
+        super().__init__(h)
+        self.g = g
+        self.rounds = rounds
+
+    @classmethod
+    def build(cls, h: Hypergraph, *,
+              rounds: Optional[int] = None) -> "FrontierEngine":
+        return cls(h, SparseLineGraph(h), rounds)
+
+    def mr(self, u: int, v: int) -> int:
+        return int(self.mr_batch([int(u)], [int(v)])[0])
+
+    def s_reach(self, u: int, v: int, s: int) -> bool:
+        return bool(self.s_reach_batch([int(u)], [int(v)], int(s))[0])
+
+    def mr_batch(self, us, vs) -> np.ndarray:
+        return frontier_batched_mr(self.g, us, vs, rounds=self.rounds)
+
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        return frontier_batched_s_reach(self.g, us, vs, int(s),
+                                        rounds=self.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Baseline backends (Section IV / VII structures)
+# ---------------------------------------------------------------------------
+
+@register_backend("ete")
+class ETEEngine(_EngineBase):
+    """Hyperedge-to-hyperedge 2-hop labeling; snapshot merges each
+    vertex's incident label lists into the shared padded form."""
+
+    name = "ete"
+
+    def __init__(self, h: Hypergraph, ete: ETEIndex):
+        super().__init__(h)
+        self.ete = ete
+        self._snap: Optional[DeviceSnapshot] = None
+
+    @classmethod
+    def build(cls, h: Hypergraph) -> "ETEEngine":
+        return cls(h, build_ete(h))
+
+    def mr(self, u: int, v: int) -> int:
+        return self.ete.mr(int(u), int(v))
+
+    def mr_batch(self, us, vs) -> np.ndarray:
+        return np.asarray(self.snapshot().mr(us, vs))
+
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+
+    def snapshot(self) -> DeviceSnapshot:
+        if self._snap is None:
+            merged = [self.ete._merged(self.h.edges_of(u))
+                      for u in range(self.h.n)]
+            ranks, svals, lengths = pad_label_rows([r for r, _ in merged],
+                                                   [s for _, s in merged])
+            self._snap = DeviceSnapshot.from_padded(ranks, svals, lengths,
+                                                    self.name)
+        return self._snap
+
+    def nbytes(self) -> int:
+        return self.ete.nbytes()
+
+
+@register_backend("threshold")
+class ThresholdEngine(_EngineBase):
+    """HypED-style per-threshold union-find components (exact; storage
+    O(S·m) — the blow-up the paper contrasts against)."""
+
+    name = "threshold"
+
+    def __init__(self, h: Hypergraph, tci: ThresholdComponentIndex):
+        super().__init__(h)
+        self.tci = tci
+
+    @classmethod
+    def build(cls, h: Hypergraph, *,
+              cap: Optional[int] = None) -> "ThresholdEngine":
+        return cls(h, ThresholdComponentIndex(h, cap=cap))
+
+    def mr(self, u: int, v: int) -> int:
+        return self.tci.mr(int(u), int(v))
+
+    def nbytes(self) -> int:
+        return self.tci.nbytes()
+
+
+@register_backend("mst-oracle")
+class MSTOracleEngine(_EngineBase):
+    """Maximum-spanning-forest bottleneck oracle — the independent exact
+    reference the cross-validation suite pins every backend against."""
+
+    name = "mst-oracle"
+
+    def __init__(self, h: Hypergraph, oracle: MSTOracle):
+        super().__init__(h)
+        self.oracle = oracle
+
+    @classmethod
+    def build(cls, h: Hypergraph) -> "MSTOracleEngine":
+        return cls(h, MSTOracle(h))
+
+    def mr(self, u: int, v: int) -> int:
+        return self.oracle.mr(int(u), int(v))
+
+
+@register_backend("closure")
+class ClosureEngine(_EngineBase):
+    """Dense (max, min)-semiring closure W* [m, m] (semiring.py).
+
+    Its snapshot is the degenerate-but-exact label form: every hyperedge
+    is a hub, ``L(u)[e] = max_{e_u ∋ u} W*[e_u, e]``.  Bottleneck triangle
+    inequality makes the shared searchsorted join exact on these rows
+    (equality is attained at the hub e = e_u of an optimal pair).
+    """
+
+    name = "closure"
+
+    def __init__(self, h: Hypergraph, w_star: np.ndarray):
+        super().__init__(h)
+        self.w_star = w_star
+        self._snap: Optional[DeviceSnapshot] = None
+
+    @classmethod
+    def build(cls, h: Hypergraph, *, method: str = "maxmin") -> "ClosureEngine":
+        return cls(h, mr_matrix(h, method=method))
+
+    def mr(self, u: int, v: int) -> int:
+        # scalar lookups stay on the host matrix (no reason to build the
+        # [n, m] snapshot for a trickle of queries)
+        return int(vertex_mr_from_edge_mr(self.h, self.w_star,
+                                          [int(u)], [int(v)])[0])
+
+    def mr_batch(self, us, vs) -> np.ndarray:
+        # batches go through the fused device join — the reason the
+        # planner picks this backend for batched small-graph workloads
+        return np.asarray(self.snapshot().mr(us, vs))
+
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+
+    def snapshot(self) -> DeviceSnapshot:
+        if self._snap is None:
+            h, m = self.h, self.h.m
+            svals = np.zeros((h.n, m), np.int32)
+            deg = np.diff(h.v_ptr)
+            nz = np.nonzero(deg > 0)[0]
+            if nz.size:
+                # segment-max of W* rows over each vertex's incidence list
+                # (one gather + reduceat; degree-0 vertices keep zero rows)
+                svals[nz] = np.maximum.reduceat(self.w_star[h.v_idx],
+                                                h.v_ptr[nz], axis=0)
+            ranks = np.broadcast_to(np.arange(m, dtype=np.int32), (h.n, m))
+            lengths = np.full(h.n, m, np.int32)
+            self._snap = DeviceSnapshot.from_padded(np.ascontiguousarray(ranks),
+                                                    svals, lengths, self.name)
+        return self._snap
+
+    def nbytes(self) -> int:
+        return int(self.w_star.nbytes)

@@ -6,11 +6,16 @@ O(m²) memory; beyond m ≈ 10⁵ the line graph no longer fits even sharded.
 This engine keeps the line graph *sparse* (edge list with overlap
 degrees) and answers batched queries with data-parallel frontier sweeps:
 
-  * ``batched_s_reach``: [Q] query pairs × one threshold s — boolean
-    frontier propagation, one scatter-max per round, O(rounds · E) work
-    on [Q, m] lanes (VPU-friendly: the scatter is a segment-max).
-  * ``batched_mr``: binary search over the threshold ladder — log₂|S|
-    sweeps (the bisection idea from §Perf C applied to the sparse form).
+  * ``frontier_batched_s_reach``: [Q] query pairs × one threshold s —
+    boolean frontier propagation, one scatter-max per round, O(rounds · E)
+    work on [Q, m] lanes (VPU-friendly: the scatter is a segment-max).
+  * ``frontier_batched_mr``: binary search over the threshold ladder —
+    log₂|S| sweeps (the bisection idea from §Perf C applied to the sparse
+    form).
+
+The old unprefixed names (``batched_s_reach`` / ``batched_mr``) collided
+with the label-join engine in query.py and survive only as deprecated
+module-level aliases.
 
 Rounds follow *linear* diameter (not the squaring closure's log₂), but
 each round is O(E) instead of O(m²) — the standard sparse/dense trade.
@@ -28,7 +33,23 @@ import numpy as np
 from .hypergraph import Hypergraph
 from .baselines import line_graph_edges
 
-__all__ = ["SparseLineGraph", "batched_s_reach", "batched_mr"]
+__all__ = ["SparseLineGraph", "frontier_batched_s_reach",
+           "frontier_batched_mr"]
+
+_DEPRECATED = {"batched_s_reach": "frontier_batched_s_reach",
+               "batched_mr": "frontier_batched_mr"}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        import warnings
+        new = _DEPRECATED[name]
+        warnings.warn(
+            f"repro.core.frontier.{name} is deprecated (it shadowed the "
+            f"label-join engine in repro.core.query); use {new} instead",
+            DeprecationWarning, stacklevel=2)
+        return globals()[new]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class SparseLineGraph:
@@ -70,8 +91,8 @@ def _sweep(src, dst, od, seeds_u, seeds_v, sizes, s, rounds: int):
     return (reach & seeds_v & alive_node[None, :]).any(axis=1)
 
 
-def batched_s_reach(g: SparseLineGraph, us, vs, s: int,
-                    rounds: Optional[int] = None) -> np.ndarray:
+def frontier_batched_s_reach(g: SparseLineGraph, us, vs, s: int,
+                             rounds: Optional[int] = None) -> np.ndarray:
     """u ~s~> v for each query pair (boolean [Q])."""
     r = rounds if rounds is not None else g.h.m
     r = min(r, g.h.m)
@@ -81,15 +102,15 @@ def batched_s_reach(g: SparseLineGraph, us, vs, s: int,
                              jnp.int32(s), r))
 
 
-def batched_mr(g: SparseLineGraph, us, vs,
-               rounds: Optional[int] = None) -> np.ndarray:
+def frontier_batched_mr(g: SparseLineGraph, us, vs,
+                        rounds: Optional[int] = None) -> np.ndarray:
     """MR(u, v) per query pair via bisection over the threshold ladder
     (log₂|S| frontier sweeps total)."""
     thr = g.thresholds
     q = len(us)
     lo = np.zeros(q, np.int64)              # index into thr of best-known-true
-    ok0 = batched_s_reach(g, us, vs, int(thr[0]), rounds) if thr.size else \
-        np.zeros(q, bool)
+    ok0 = frontier_batched_s_reach(g, us, vs, int(thr[0]), rounds) \
+        if thr.size else np.zeros(q, bool)
     # lo/hi are ladder indices; answer = thr[best] where reachable
     best = np.full(q, -1, np.int64)
     best[ok0] = 0
@@ -106,8 +127,9 @@ def batched_mr(g: SparseLineGraph, us, vs,
             sel = active & (mids == t_idx)
             if not sel.any():
                 continue
-            ok = batched_s_reach(g, np.asarray(us)[sel], np.asarray(vs)[sel],
-                                 int(thr[t_idx]), rounds)
+            ok = frontier_batched_s_reach(g, np.asarray(us)[sel],
+                                          np.asarray(vs)[sel],
+                                          int(thr[t_idx]), rounds)
             idx = np.nonzero(sel)[0]
             reach_idx = idx[ok]
             fail_idx = idx[~ok]

@@ -36,7 +36,30 @@ import numpy as np
 
 from .hypergraph import Hypergraph
 
-__all__ = ["HLIndex", "build_basic", "build_fast"]
+__all__ = ["HLIndex", "build_basic", "build_fast", "pad_label_rows"]
+
+
+def pad_label_rows(row_ranks, row_svals, pad_to=None):
+    """Pack ragged per-vertex (rank, s) label rows into the padded dense
+    form consumed by the batched query engine: one concatenate + fancy-
+    index scatter, no per-row Python copies.
+
+    Returns (ranks [n, Lmax] int32 ascending with INT32_MAX padding,
+    svals [n, Lmax] int32 with 0 padding, lengths [n] int32).
+    """
+    n = len(row_ranks)
+    lengths = np.array([a.size for a in row_svals], np.int32)
+    lmax = int(pad_to if pad_to is not None else (lengths.max() if n else 0))
+    ranks = np.full((n, lmax), np.iinfo(np.int32).max, np.int32)
+    svals = np.zeros((n, lmax), np.int32)
+    total = int(lengths.sum())
+    if total and lmax:
+        rows = np.repeat(np.arange(n), lengths)
+        starts = np.cumsum(lengths, dtype=np.int64) - lengths
+        cols = np.arange(total, dtype=np.int64) - np.repeat(starts, lengths)
+        ranks[rows, cols] = np.concatenate(row_ranks)
+        svals[rows, cols] = np.concatenate(row_svals)
+    return ranks, svals, lengths
 
 
 @dataclasses.dataclass
@@ -71,16 +94,7 @@ class HLIndex:
         Returns (ranks [n, Lmax] int32 ascending with INT32_MAX padding,
         svals [n, Lmax] int32 with 0 padding, lengths [n]).
         """
-        n = self.h.n
-        lengths = np.array([a.size for a in self.labels_s], np.int32)
-        lmax = int(pad_to if pad_to is not None else (lengths.max() if n else 0))
-        ranks = np.full((n, lmax), np.iinfo(np.int32).max, np.int32)
-        svals = np.zeros((n, lmax), np.int32)
-        for u in range(n):
-            k = int(lengths[u])
-            ranks[u, :k] = self.labels_rank[u][:k]
-            svals[u, :k] = self.labels_s[u][:k]
-        return ranks, svals, lengths
+        return pad_label_rows(self.labels_rank, self.labels_s, pad_to)
 
 
 class _Builder:

@@ -13,6 +13,7 @@ maps onto; it serves millions of queries per batch.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, Tuple
 
@@ -22,8 +23,8 @@ import numpy as np
 
 from .hlindex import HLIndex
 
-__all__ = ["mr_query", "s_reach_query", "mr_query_dicts", "PaddedIndex",
-           "batched_mr"]
+__all__ = ["mr_query", "s_reach_query", "mr_query_dicts", "DeviceSnapshot",
+           "PaddedIndex", "batched_mr"]
 
 
 def mr_query(idx: HLIndex, u: int, v: int) -> int:
@@ -80,21 +81,61 @@ def mr_query_dicts(lu: Dict[int, int], lv: Dict[int, int],
 # JAX batched engine
 # ---------------------------------------------------------------------------
 
-class PaddedIndex:
-    """Device-resident padded HL-index for batched queries."""
+@dataclasses.dataclass(eq=False)    # identity equality/hash: fields are arrays
+class DeviceSnapshot:
+    """Padded per-vertex label tensors on device, served by ``batched_mr``.
+
+    ``ranks`` [n, Lmax] int32 ascending per row (INT32_MAX padding),
+    ``svals`` [n, Lmax] int32 (0 padding), ``lengths`` [n] int32.  The row
+    key space only needs to be consistent across rows (hub importance rank
+    for the HL-index/ETE backends, raw hub id for the dense closure) —
+    this is the one device-resident serving form every label-shaped
+    backend of ``repro.core.engine`` exports.
+    """
+
+    ranks: jnp.ndarray
+    svals: jnp.ndarray
+    lengths: jnp.ndarray
+    backend: str = "hl-index"
+
+    @classmethod
+    def from_padded(cls, ranks, svals, lengths, backend: str) -> "DeviceSnapshot":
+        return cls(ranks=jnp.asarray(ranks), svals=jnp.asarray(svals),
+                   lengths=jnp.asarray(lengths), backend=backend)
+
+    @classmethod
+    def from_hlindex(cls, idx: HLIndex,
+                     backend: str = "hl-index") -> "DeviceSnapshot":
+        ranks, svals, lengths = idx.as_padded()
+        return cls.from_padded(ranks, svals, lengths, backend)
+
+    @property
+    def lmax(self) -> int:
+        return int(self.ranks.shape[1])
+
+    def nbytes(self) -> int:
+        return int(self.ranks.nbytes + self.svals.nbytes
+                   + self.lengths.nbytes)
+
+    def mr(self, us, vs) -> jnp.ndarray:
+        us = jnp.asarray(us)
+        if self.lmax == 0:          # no labels anywhere: nothing is reachable
+            return jnp.zeros(us.shape, jnp.int32)
+        return batched_mr(self.ranks, self.svals, us, jnp.asarray(vs))
+
+    def s_reach(self, us, vs, s: int) -> jnp.ndarray:
+        return self.mr(us, vs) >= s
+
+
+class PaddedIndex(DeviceSnapshot):
+    """Back-compat constructor: the padded device form built straight from
+    an ``HLIndex``.  New code should use ``DeviceSnapshot.from_hlindex``
+    (or ``engine.snapshot()`` through ``repro.api``)."""
 
     def __init__(self, idx: HLIndex):
         ranks, svals, lengths = idx.as_padded()
-        self.ranks = jnp.asarray(ranks)     # [n, Lmax] ascending, INT32_MAX pad
-        self.svals = jnp.asarray(svals)     # [n, Lmax] 0 pad
-        self.lengths = jnp.asarray(lengths)
-        self.lmax = int(ranks.shape[1])
-
-    def mr(self, us, vs):
-        return batched_mr(self.ranks, self.svals, jnp.asarray(us), jnp.asarray(vs))
-
-    def s_reach(self, us, vs, s: int):
-        return self.mr(us, vs) >= s
+        super().__init__(ranks=jnp.asarray(ranks), svals=jnp.asarray(svals),
+                         lengths=jnp.asarray(lengths), backend="hl-index")
 
 
 @functools.partial(jax.jit, donate_argnums=())

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.train.optimizer import quantize_blockwise, dequantize_blockwise
 
 Params = Any
@@ -45,7 +46,7 @@ def compressed_allreduce(tree: Params, mesh: Mesh, axis: str = "data",
 
         # out is replicated by construction (same all_gather everywhere);
         # the static varying-ness checker can't see that through gather
-        return jax.shard_map(body, mesh=mesh, in_specs=P(axis),
+        return shard_map(body, mesh=mesh, in_specs=P(axis),
                              out_specs=P(), check_vma=False)(leaf)
 
     return jax.tree.map(one, tree)

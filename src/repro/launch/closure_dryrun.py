@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.launch.mesh import make_production_mesh
 from repro.launch.hlo_analysis import loop_aware_collectives
 from repro.core.distributed import (sharded_maxmin_round,
@@ -76,7 +78,7 @@ def lower_closure_cell(kind: str, m: int = 65536, s_thresholds: int = 32,
                                   preferred_element_type=jnp.float32)
                 return (prod > 0).astype(blk.dtype)
 
-            fn = jax.jit(jax.shard_map(round_body, mesh=mesh,
+            fn = jax.jit(shard_map(round_body, mesh=mesh,
                                        in_specs=batch_spec,
                                        out_specs=batch_spec))
             arg = jax.ShapeDtypeStruct((s_eff, m, m), dt,

@@ -71,11 +71,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return rec
 
     if mesh_shape is not None:
-        from jax.sharding import AxisType
+        from repro.compat import make_mesh
         axes = (("pod", "data", "model") if len(mesh_shape) == 3
                 else ("data", "model"))
-        mesh = jax.make_mesh(tuple(mesh_shape), axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        mesh = make_mesh(tuple(mesh_shape), axes)
         rec["mesh_shape"] = list(mesh_shape)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)

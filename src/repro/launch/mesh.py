@@ -7,8 +7,9 @@ only then calls these.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh as _make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -20,11 +21,9 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     batch (reachability engine) across the inter-pod DCI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     """Small mesh for CPU tests (requires the host-device-count flag)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

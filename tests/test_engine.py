@@ -1,0 +1,153 @@
+"""Unified ReachabilityEngine API: cross-validation of every registered
+backend against the independent MSTOracle, snapshot equivalence, the auto
+planner, the vectorized as_padded export, and the deprecated-alias shims.
+
+The known-incorrect ``vtv`` path (paper Example 5) deliberately stays out
+of the registry, so "every registered backend" is also a soundness claim.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (build_engine, available_backends, plan_backend,
+                       random_hypergraph, planted_chain_hypergraph,
+                       from_edge_lists)
+from repro.core import MSTOracle, build_fast, minimize
+from repro.core.engine import SnapshotUnsupported
+
+GRAPHS = {
+    "random": lambda: random_hypergraph(30, 45, seed=3),
+    "chain": lambda: planted_chain_hypergraph(2, 6, overlap=2,
+                                              extra_size=2, seed=0),
+    "isolated": lambda: from_edge_lists([[0, 1, 2], [2, 3], [5, 6, 7],
+                                         [6, 7, 8]], n=12),
+}
+BACKENDS = available_backends()
+
+
+@pytest.fixture(scope="module", params=sorted(GRAPHS))
+def case(request):
+    h = GRAPHS[request.param]()
+    rng = np.random.default_rng(7)
+    us = rng.integers(0, h.n, 60)
+    vs = rng.integers(0, h.n, 60)
+    oracle = MSTOracle(h)
+    want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)],
+                    np.int64)
+    return h, us, vs, want
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_matches_mst_oracle(case, backend):
+    h, us, vs, want = case
+    eng = build_engine(h, backend)
+    assert eng.name == backend
+
+    got = np.asarray(eng.mr_batch(us, vs)).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+
+    # scalar path agrees with batch path
+    for u, v, w in zip(us[:15], vs[:15], want[:15]):
+        assert eng.mr(int(u), int(v)) == int(w)
+
+    for s in (1, 2, 3):
+        sr = np.asarray(eng.s_reach_batch(us, vs, s))
+        np.testing.assert_array_equal(sr, want >= s)
+        for u, v, w in zip(us[:10], vs[:10], want[:10]):
+            assert eng.s_reach(int(u), int(v), s) == (int(w) >= s)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_snapshot_serves_same_answers(case, backend):
+    h, us, vs, want = case
+    eng = build_engine(h, backend)
+    try:
+        snap = eng.snapshot()
+    except SnapshotUnsupported:
+        pytest.skip(f"{backend} has no padded device form")
+    got = np.asarray(snap.mr(us, vs)).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(snap.s_reach(us, vs, 2)),
+                                  want >= 2)
+    assert snap.backend == backend
+    assert snap.nbytes() > 0 or h.m == 0
+
+
+def test_auto_planner_picks_registered_backend():
+    h = random_hypergraph(30, 45, seed=3)
+    for hint in (None, 8, 10_000):
+        name = plan_backend(h, hint)
+        assert name in BACKENDS
+        eng = build_engine(h, "auto", batch_hint=hint)
+        assert eng.name in BACKENDS
+    with pytest.raises(ValueError, match="unknown backend"):
+        build_engine(h, "no-such-backend")
+
+
+def test_auto_engine_matches_oracle():
+    h = random_hypergraph(25, 35, seed=11)
+    oracle = MSTOracle(h)
+    rng = np.random.default_rng(0)
+    us, vs = rng.integers(0, h.n, 40), rng.integers(0, h.n, 40)
+    want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)])
+    eng = build_engine(h, "auto", batch_hint=len(us))
+    np.testing.assert_array_equal(
+        np.asarray(eng.mr_batch(us, vs)).astype(np.int64), want)
+
+
+def test_vtv_not_registered():
+    assert "vtv" not in BACKENDS          # unsound for MR (paper Example 5)
+
+
+# ---------------------------------------------------------------------------
+# satellite: vectorized as_padded must match the per-row reference scatter
+# ---------------------------------------------------------------------------
+
+def _as_padded_reference(idx, pad_to=None):
+    n = idx.h.n
+    lengths = np.array([a.size for a in idx.labels_s], np.int32)
+    lmax = int(pad_to if pad_to is not None else (lengths.max() if n else 0))
+    ranks = np.full((n, lmax), np.iinfo(np.int32).max, np.int32)
+    svals = np.zeros((n, lmax), np.int32)
+    for u in range(n):
+        k = int(lengths[u])
+        ranks[u, :k] = idx.labels_rank[u][:k]
+        svals[u, :k] = idx.labels_s[u][:k]
+    return ranks, svals, lengths
+
+
+@pytest.mark.parametrize("pad_to", [None, 40])
+def test_as_padded_vectorized_identity(pad_to):
+    h = random_hypergraph(35, 50, seed=5)
+    for idx in (build_fast(h), minimize(build_fast(h))):
+        got = idx.as_padded(pad_to)
+        want = _as_padded_reference(idx, pad_to)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_as_padded_empty_labels():
+    h = from_edge_lists([[0, 1]], n=4)    # vertices 2, 3 label-free
+    idx = build_fast(h)
+    got = idx.as_padded()
+    want = _as_padded_reference(idx)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# satellite: deprecated aliases still resolve (loudly)
+# ---------------------------------------------------------------------------
+
+def test_deprecated_frontier_aliases():
+    import repro.core as core
+    import repro.core.frontier as frontier
+    with pytest.warns(DeprecationWarning):
+        assert frontier.batched_mr is frontier.frontier_batched_mr
+    with pytest.warns(DeprecationWarning):
+        assert frontier.batched_s_reach is frontier.frontier_batched_s_reach
+    with pytest.warns(DeprecationWarning):
+        assert core.batched_s_reach is frontier.frontier_batched_s_reach
+    # the label-join engine owns the unprefixed name now
+    from repro.core import batched_mr
+    from repro.core.query import batched_mr as query_batched_mr
+    assert batched_mr is query_batched_mr

@@ -4,7 +4,8 @@ import pytest
 
 from repro.core import (random_hypergraph, planted_chain_hypergraph,
                         mr_oracle_dense)
-from repro.core.frontier import SparseLineGraph, batched_s_reach, batched_mr
+from repro.core.frontier import (SparseLineGraph, frontier_batched_s_reach,
+                                 frontier_batched_mr)
 
 
 @pytest.mark.parametrize("seed", range(3))
@@ -15,7 +16,7 @@ def test_sreach_matches_oracle(seed):
     rng = np.random.default_rng(seed)
     us, vs = rng.integers(0, h.n, 30), rng.integers(0, h.n, 30)
     for s in (1, 2, 4):
-        got = batched_s_reach(g, us, vs, s, rounds=h.m)
+        got = frontier_batched_s_reach(g, us, vs, s, rounds=h.m)
         want = np.array([oracle[u, v] >= s for u, v in zip(us, vs)])
         np.testing.assert_array_equal(got, want)
 
@@ -27,7 +28,7 @@ def test_mr_bisection_matches_oracle(seed):
     g = SparseLineGraph(h)
     rng = np.random.default_rng(seed)
     us, vs = rng.integers(0, h.n, 30), rng.integers(0, h.n, 30)
-    got = batched_mr(g, us, vs, rounds=h.m)
+    got = frontier_batched_mr(g, us, vs, rounds=h.m)
     want = np.array([oracle[u, v] for u, v in zip(us, vs)])
     np.testing.assert_array_equal(got, want)
 
@@ -38,5 +39,5 @@ def test_chain_diameter_rounds():
     g = SparseLineGraph(h)
     u = np.array([int(h.edge(0)[0])])
     v = np.array([int(h.edge(11)[-1])])
-    assert not batched_s_reach(g, u, v, 2, rounds=3)[0]
-    assert batched_s_reach(g, u, v, 2, rounds=12)[0]
+    assert not frontier_batched_s_reach(g, u, v, 2, rounds=3)[0]
+    assert frontier_batched_s_reach(g, u, v, 2, rounds=12)[0]
