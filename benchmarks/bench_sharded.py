@@ -1,0 +1,83 @@
+"""Sharded-vs-closure benchmark sweep over host device counts.
+
+Each device count needs its own process (``XLA_FLAGS=
+--xla_force_host_platform_device_count=N`` must precede jax init), so the
+parent spawns one worker per N, collects the ``sharded_suite`` rows, and
+writes ``BENCH_sharded.json`` at the repo root — the accumulating record
+of the perf trajectory (allgather vs ring, 1-4 host devices).
+
+  PYTHONPATH=src python -m benchmarks.bench_sharded            # sweep
+  PYTHONPATH=src python -m benchmarks.bench_sharded --worker   # one N
+
+Host-CPU caveat recorded in the JSON: "devices" here are XLA host
+platform devices carved out of one CPU, so multi-device timings measure
+collective/partitioning *overhead*, not speed-up — the numbers to watch
+are allgather vs ring deltas and the single-device parity with
+``closure``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+
+def worker(dataset: str, n_q: int) -> None:
+    from . import paper_tables as pt
+
+    rows = pt.sharded_suite(dataset, n_q=n_q)
+    print(json.dumps([(name, float(val), unit) for name, val, unit in rows]))
+
+
+def sweep(dataset: str, n_q: int, device_counts, out_path: str) -> dict:
+    results = []
+    for nd in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nd}"
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        cmd = [sys.executable, "-m", "benchmarks.bench_sharded", "--worker",
+               "--dataset", dataset, "--n-q", str(n_q)]
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             cwd=os.path.join(os.path.dirname(__file__), ".."))
+        if out.returncode != 0:
+            raise RuntimeError(f"worker (devices={nd}) failed:\n{out.stderr}")
+        rows = json.loads(out.stdout.strip().splitlines()[-1])
+        results.append({"devices": nd, "rows": rows})
+        for name, val, unit in rows:
+            print(f"{name},{val:.3f},{unit}")
+    doc = {
+        "dataset": dataset,
+        "n_q": n_q,
+        "note": ("XLA host-platform devices on one CPU: multi-device rows "
+                 "measure collective overhead, not speed-up; compare "
+                 "allgather vs ring and 1-device parity with 'closure'"),
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true",
+                    help="measure on this process's devices, print JSON rows")
+    ap.add_argument("--dataset", default="ENG-s")
+    ap.add_argument("--n-q", type=int, default=128)
+    ap.add_argument("--devices", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_sharded.json"))
+    args = ap.parse_args()
+    if args.worker:
+        worker(args.dataset, args.n_q)
+    else:
+        sweep(args.dataset, args.n_q, args.devices, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,8 @@ from repro.core import (Hypergraph, from_edge_lists, build_basic, build_fast,
 from .datasets import BENCH_DATASETS, make_dataset
 
 __all__ = ["exp1_query_time", "exp2_indexing_time", "exp3_space",
-           "exp4_scalability", "exp5_case_study", "engine_suite"]
+           "exp4_scalability", "exp5_case_study", "engine_suite",
+           "sharded_suite"]
 
 
 def _timeit(fn: Callable, *, reps: int = 1) -> float:
@@ -92,6 +93,33 @@ def exp1_query_time(dataset: str = "BK-s", n_q: int = 1000,
     return rows
 
 
+def _bench_backend(prefix: str, builder: Callable, us, vs,
+                   want: np.ndarray) -> List[Tuple[str, float, str]]:
+    """Build, warm, time, and cross-validate one engine: emits
+    ``{prefix}.build`` (total-us), ``{prefix}.batch-query``
+    (per-query-us), ``{prefix}.agrees-with-oracle`` (bool; raises on
+    disagreement).  jax dispatch is asynchronous, so the build clock only
+    stops after ``block_until_built()`` — the engine-protocol hook async
+    backends override — returns."""
+    n_q = len(want)
+    t0 = time.perf_counter()
+    eng = builder()
+    getattr(eng, "block_until_built", lambda: None)()
+    t_build = time.perf_counter() - t0
+    _ = eng.mr_batch(us, vs)          # compile/warm at the timed shape
+    t0 = time.perf_counter()
+    got = np.asarray(eng.mr_batch(us, vs))
+    t_q = time.perf_counter() - t0
+    agrees = np.array_equal(got.astype(np.int64), want)
+    if not agrees:
+        raise AssertionError(
+            f"{prefix} disagrees with mst-oracle "
+            f"({int((got.astype(np.int64) != want).sum())}/{n_q} mismatches)")
+    return [(f"{prefix}.build", t_build * 1e6, "total-us"),
+            (f"{prefix}.batch-query", t_q / n_q * 1e6, "per-query-us"),
+            (f"{prefix}.agrees-with-oracle", float(agrees), "bool")]
+
+
 def engine_suite(dataset: str = "ENG-s",
                  n_q: int = 128) -> List[Tuple[str, float, str]]:
     """Every registered backend through the one facade: build time, batched
@@ -103,25 +131,38 @@ def engine_suite(dataset: str = "ENG-s",
     rows: List[Tuple[str, float, str]] = []
     for backend in available_backends():
         # no rounds cap for frontier: the agreement assert needs exactness
-        t0 = time.perf_counter()
-        eng = build_engine(h, backend)
-        t_build = time.perf_counter() - t0
-        _ = eng.mr_batch(us, vs)          # compile/warm at the timed shape
-        t0 = time.perf_counter()
-        got = np.asarray(eng.mr_batch(us, vs))
-        t_q = time.perf_counter() - t0
-        agrees = np.array_equal(got.astype(np.int64), want)
-        if not agrees:
-            raise AssertionError(
-                f"backend {backend!r} disagrees with mst-oracle on "
-                f"{dataset} ({int((got.astype(np.int64) != want).sum())}"
-                f"/{n_q} mismatches)")
-        rows.append((f"engine.{dataset}.{backend}.build", t_build * 1e6,
-                     "total-us"))
-        rows.append((f"engine.{dataset}.{backend}.batch-query",
-                     t_q / n_q * 1e6, "per-query-us"))
-        rows.append((f"engine.{dataset}.{backend}.agrees-with-oracle",
-                     float(agrees), "bool"))
+        rows += _bench_backend(f"engine.{dataset}.{backend}",
+                               lambda b=backend: build_engine(h, b),
+                               us, vs, want)
+    return rows
+
+
+def sharded_suite(dataset: str = "ENG-s", n_q: int = 128,
+                  mesh=None) -> List[Tuple[str, float, str]]:
+    """The ``sharded`` backend vs the single-device ``closure`` backend:
+    build (= closure) time and batched query time for both collective
+    schedules (allgather, ring), each cross-validated against the
+    ``mst-oracle`` reference.  ``mesh=None`` uses a near-square 2-D mesh
+    over every visible device — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to sweep N
+    (``benchmarks/bench_sharded.py`` automates the 1/2/4 sweep)."""
+    from repro.core.distributed import default_line_graph_mesh
+
+    h = make_dataset(dataset)
+    us, vs = _query_pairs(h, n_q, seed=13)
+    want = build_engine(h, "mst-oracle").mr_batch(us, vs).astype(np.int64)
+    if mesh is None:
+        mesh = default_line_graph_mesh()
+    ndev = int(mesh.devices.size)
+    rows: List[Tuple[str, float, str]] = [
+        (f"sharded.{dataset}.devices", float(ndev), "count")]
+    rows += _bench_backend(f"sharded.{dataset}.closure-1dev",
+                           lambda: build_engine(h, "closure"), us, vs, want)
+    for sched in ("allgather", "ring"):
+        rows += _bench_backend(
+            f"sharded.{dataset}.sharded-{sched}-{ndev}dev",
+            lambda s=sched: build_engine(h, "sharded", mesh=mesh, schedule=s),
+            us, vs, want)
     return rows
 
 

@@ -38,6 +38,9 @@ def main() -> None:
     # unified engine API: every registered backend built, benchmarked and
     # cross-validated through the repro.api facade
     rows += pt.engine_suite("ENG-s", n_q=64 if args.quick else 128)
+    # sharded backend vs single-device closure, both collective schedules
+    # (multi-device numbers come from benchmarks/bench_sharded.py)
+    rows += pt.sharded_suite("ENG-s", n_q=64 if args.quick else 128)
     # kernel/closure layer
     rows += kb.closure_bench(m=256 if args.quick else 512)
 

@@ -11,8 +11,8 @@ import time
 import jax
 import numpy as np
 
-from repro.api import build_engine, random_hypergraph
-from repro.core import distinct_thresholds, vertex_mr_from_edge_mr
+from repro.api import build_engine, plan_backend, random_hypergraph
+from repro.core import distinct_thresholds
 from repro.core.distributed import (sharded_maxmin_closure,
                                     sharded_threshold_closure_mr,
                                     collective_bytes_of, sharded_maxmin_round,
@@ -49,14 +49,22 @@ def main():
     print(f"threshold closure (S={thr.size} over pod axis) on 2x2x2: "
           f"{dt:.2f}s  correct={np.array_equal(got, dense)}")
 
-    # vertex-level spot check: sharded closure answers == hl-index engine
-    # answers, both through the unified query surface
+    # the "sharded" backend: the same closures behind the unified engine
+    # API — computed once at build, served off a mesh-sharded snapshot
     rng = np.random.default_rng(0)
     us, vs = rng.integers(0, h.n, 256), rng.integers(0, h.n, 256)
-    from_sharded = vertex_mr_from_edge_mr(h, got, us, vs).astype(np.int64)
     hl = build_engine(h, backend="hl-index")
-    print("sharded closure == hl-index engine on 256 vertex queries:",
-          np.array_equal(from_sharded, hl.mr_batch(us, vs).astype(np.int64)))
+    want = hl.mr_batch(us, vs).astype(np.int64)
+    for sched in ("allgather", "ring"):
+        eng = build_engine(h, backend="sharded", mesh=mesh, schedule=sched)
+        ok = np.array_equal(np.asarray(eng.mr_batch(us, vs)).astype(np.int64),
+                            want)
+        print(f"sharded engine [{sched:9s}] == hl-index on 256 vertex "
+              f"queries: {ok}")
+    # the planner routes to "sharded" when a multi-device mesh is passed
+    # and the closure exceeds the per-device budget
+    print("auto planner with mesh + tight budget picks:",
+          plan_backend(h, mesh=mesh, device_budget_bytes=0))
 
     # what goes over the wire per round
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -15,9 +15,25 @@ Every backend (see ``available_backends()``) answers through the same
 Examples, benchmarks, and the cross-validation suite all route through
 this module, so a new backend is one ``register_backend`` entry away from
 being benchmarked and validated.
+
+Multi-device serving goes through the same two calls — build a mesh and
+pass it:
+
+    from repro.api import build_engine, make_mesh
+
+    mesh = make_mesh((2, 2), ("data", "model"))   # or any device grid
+    eng = build_engine(h, backend="auto", mesh=mesh)   # planner may pick
+    eng = build_engine(h, backend="sharded", mesh=mesh, schedule="ring")
+    eng.mr_batch(us, vs)             # served off the block-sharded W*
+
+``make_mesh`` (re-exported from ``repro.compat``) hides jax-version API
+drift; ``snap.to_mesh(mesh)`` re-lands any label snapshot sharded over a
+mesh.  The architecture — data flow, backend catalogue, planner policy,
+and the sharding schedules — is documented in ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
+from repro.compat import make_mesh
 from repro.core.engine import (ReachabilityEngine, DeviceSnapshot,
                                SnapshotUnsupported, available_backends,
                                plan_backend, register_backend)
@@ -30,6 +46,7 @@ from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
     "build_engine", "available_backends", "plan_backend", "register_backend",
+    "make_mesh",
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
 ]

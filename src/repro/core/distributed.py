@@ -1,4 +1,5 @@
-"""Distributed reachability engine: 2-D block-sharded semiring closures.
+"""Distributed reachability: 2-D block-sharded semiring closures and the
+``sharded`` engine backend that serves queries off them.
 
 For hypergraphs whose line graph does not fit one device, the closure
 operand R [m, m] is block-sharded over the production mesh axes
@@ -23,6 +24,13 @@ final max-reduce), giving the multi-pod scaling story.
 
 Meshes with unit axes degrade gracefully (the collectives become no-ops),
 so the same code runs tests on 1-4 host devices and the 512-way dry-run.
+
+``ShardedEngine`` (registered as backend ``"sharded"`` — see
+``repro.core.engine``) wraps these closures in the ``ReachabilityEngine``
+protocol: the closure is computed **once** at build time and kept
+device-resident in its block-sharded layout; every query — scalar or
+batch — is served off that resident structure through a mesh-sharded
+``DeviceSnapshot``, never by re-running the closure.
 """
 from __future__ import annotations
 
@@ -34,11 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import make_mesh, shard_map
+from .engine import _EngineBase, register_backend
+from .query import DeviceSnapshot
 
 __all__ = [
     "pad_for_mesh", "sharded_maxmin_round", "sharded_maxmin_closure",
     "sharded_threshold_closure_mr", "collective_bytes_of",
+    "default_line_graph_mesh", "ShardedEngine",
 ]
 
 
@@ -136,8 +147,18 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
 
 def sharded_maxmin_closure(w, mesh: Mesh, *, rounds: Optional[int] = None,
                            schedule: str = "allgather",
-                           axes: Tuple[str, str] = ("data", "model")):
-    """Bottleneck closure of a 2-D block-sharded line graph."""
+                           axes: Tuple[str, str] = ("data", "model"),
+                           trim: bool = True):
+    """Bottleneck closure of a 2-D block-sharded line graph.
+
+    ``w`` is the [m, m] line graph (host or device); the result is W*,
+    the hyperedge-level max-reachability matrix.  With ``trim=True``
+    (default) the mesh padding is sliced off and the result matches
+    ``semiring.maxmin_closure`` exactly.  ``trim=False`` keeps the padded
+    [mp, mp] array resident **in its block-sharded layout** — the form
+    ``ShardedEngine`` serves queries from (padding entries are zero, the
+    (max, min) annihilator, so they never contribute to an answer).
+    """
     wp = pad_for_mesh(np.asarray(w), mesh, axes)
     m = wp.shape[0]
     n_rounds = rounds if rounds is not None else max(1, int(np.ceil(np.log2(max(m, 2)))))
@@ -146,6 +167,8 @@ def sharded_maxmin_closure(w, mesh: Mesh, *, rounds: Optional[int] = None,
     round_fn = jax.jit(sharded_maxmin_round(mesh, schedule=schedule, axes=axes))
     for _ in range(n_rounds):
         r = round_fn(r)
+    if not trim:
+        return r
     return r[:np.asarray(w).shape[0], :np.asarray(w).shape[1]]
 
 
@@ -224,3 +247,173 @@ def collective_bytes_of(lowered_text: str) -> dict:
         counts[op] += 1
     return {"bytes": sizes, "counts": counts,
             "total_bytes": int(sum(sizes.values()))}
+
+
+# ---------------------------------------------------------------------------
+# The "sharded" engine backend
+# ---------------------------------------------------------------------------
+
+def default_line_graph_mesh(axes: Tuple[str, str] = ("data", "model")) -> Mesh:
+    """2-D mesh over every visible device, rows × cols as near-square as
+    the device count factors (4 -> 2×2, 2 -> 1×2, 1 -> 1×1, 6 -> 2×3).
+
+    Near-square minimizes the allgather panel bytes per device per round
+    (row panel m·m/c + column panel m·m/r is minimized at r ≈ c ≈ √P).
+    """
+    nd = jax.device_count()
+    r = max(1, int(np.floor(np.sqrt(nd))))
+    while nd % r:
+        r -= 1
+    return make_mesh((r, nd // r), axes)
+
+
+def _round_up(x: int, k: int) -> int:
+    return -(-x // k) * k
+
+
+@register_backend("sharded")
+class ShardedEngine(_EngineBase):
+    """Multi-device backend: W* block-sharded over a mesh, queries served
+    off a mesh-sharded ``DeviceSnapshot``.
+
+    Build runs ``sharded_maxmin_closure`` exactly once (allgather or ring
+    schedule) and keeps the padded closure resident in its
+    ``P(row_axis, col_axis)`` layout.  The snapshot derives the per-vertex
+    label rows ``svals[u] = max_{e ∋ u} W*[e, :]`` on device (a scan of
+    gathers, output sharded the same way), so label mass never funnels
+    through one host round-trip and the snapshot survives across query
+    batches.  Same exactness argument as the single-device ``closure``
+    backend: every hyperedge is a hub, and the bottleneck triangle
+    inequality makes the shared searchsorted join exact on these rows.
+
+    Mesh handling: ``mesh=None`` builds a near-square 2-D mesh over all
+    visible devices (``default_line_graph_mesh``); unit axes degrade to
+    single-device execution (the collectives become no-ops), so the same
+    engine runs on 1 host device and a 16×16 pod slice.
+    """
+
+    name = "sharded"
+
+    def __init__(self, h, mesh: Mesh, axes: Tuple[str, str],
+                 schedule: str, w_star_padded, m_true: int):
+        super().__init__(h)
+        self.mesh = mesh
+        self.axes = axes
+        self.schedule = schedule
+        self._w_star = w_star_padded       # [mp, mp] sharded P(*axes)
+        self._m_padded = int(w_star_padded.shape[0])
+        self._m_true = m_true
+        self._snap: Optional[DeviceSnapshot] = None
+
+    @classmethod
+    def build(cls, h, *, mesh: Optional[Mesh] = None,
+              schedule: str = "allgather",
+              axes: Optional[Tuple[str, str]] = None,
+              rounds: Optional[int] = None) -> "ShardedEngine":
+        """``schedule`` ∈ {"allgather", "ring"} picks the collective plan
+        (see module docstring); ``rounds`` caps the squaring ladder
+        (None = ⌈log2 mp⌉, exact).  ``axes`` names the (row, column) mesh
+        axes; None uses the mesh's own last two axis names (so any
+        axis naming works), or ``("data", "model")`` when the mesh is
+        built here."""
+        if axes is None:
+            axes = (("data", "model") if mesh is None
+                    else tuple(mesh.axis_names[-2:]))
+        if mesh is None:
+            mesh = default_line_graph_mesh(axes)
+        if len(axes) < 2:
+            raise ValueError(
+                f"the sharded backend needs a mesh with >= 2 axes to 2-D "
+                f"block-shard over; got axis names {mesh.axis_names}")
+        if h.m == 0:
+            return cls(h, mesh, axes, schedule,
+                       jnp.zeros((0, 0), jnp.float32), 0)
+        w = h.line_graph(np.int32).astype(np.float32)
+        w_star = sharded_maxmin_closure(w, mesh, rounds=rounds,
+                                        schedule=schedule, axes=axes,
+                                        trim=False)
+        return cls(h, mesh, axes, schedule, w_star, h.m)
+
+    # -- queries: everything routes through the resident snapshot --------
+
+    def mr(self, u: int, v: int) -> int:
+        return int(self.mr_batch(np.array([int(u)]), np.array([int(v)]))[0])
+
+    def s_reach(self, u: int, v: int, s: int) -> bool:
+        return self.mr(u, v) >= int(s)
+
+    def mr_batch(self, us, vs) -> np.ndarray:
+        return np.asarray(self.snapshot().mr(us, vs)).astype(np.int64)
+
+    def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+
+    def snapshot(self) -> DeviceSnapshot:
+        if self._snap is None:
+            self._snap = self._build_snapshot()
+            # every query path serves off the snapshot from here on — free
+            # the closure so the resident footprint is the snapshot alone
+            # (the regime this backend exists for is memory-bound)
+            self._w_star = None
+        return self._snap
+
+    def _build_snapshot(self) -> DeviceSnapshot:
+        h, mesh = self.h, self.mesh
+        row_ax, col_ax = self.axes
+        if self._m_true == 0 or h.n == 0:
+            z = np.zeros((h.n, 0), np.int32)
+            return DeviceSnapshot.from_padded(z, z, np.zeros(h.n, np.int32),
+                                              self.name)
+        mp = self._m_padded
+        n_pad = _round_up(h.n, mesh.shape[row_ax])
+        deg = np.diff(h.v_ptr)
+        d_max = max(int(deg.max()), 1)
+        # padded incidence: inc[u, k] = k-th hyperedge of u, mp = phantom
+        # all-zero row of the padded closure (annihilator => no-op);
+        # one-shot scatter straight from the CSR arrays
+        inc = np.full((n_pad, d_max), mp, np.int32)
+        rows = np.repeat(np.arange(h.n), deg)
+        cols = np.arange(h.nnz) - np.repeat(h.v_ptr[:-1], deg)
+        inc[rows, cols] = h.v_idx
+        spec2d = NamedSharding(mesh, P(row_ax, col_ax))
+        inc_dev = jax.device_put(inc, NamedSharding(mesh, P(row_ax, None)))
+
+        @functools.partial(jax.jit, out_shardings=spec2d)
+        def vertex_rows(w_star, inc):
+            # svals[u] = max_{e in E(u)} W*[e, :], scanned over the degree
+            # dim so the working set stays one [n_pad, mp] panel
+            w1 = jnp.concatenate(
+                [w_star, jnp.zeros((1, w_star.shape[1]), w_star.dtype)], 0)
+
+            def body(acc, d):
+                return jnp.maximum(acc, w1[jnp.take(inc, d, axis=1)]), None
+
+            init = jnp.zeros((inc.shape[0], w_star.shape[1]), w_star.dtype)
+            out, _ = jax.lax.scan(body, init, jnp.arange(inc.shape[1]))
+            return out
+
+        svals = vertex_rows(self._w_star, inc_dev).astype(jnp.int32)
+        # rank space = hyperedge id (ascending per row by construction);
+        # padded columns carry sval 0, which can never win the join max.
+        # Materialized directly on device in the sharded layout — the
+        # [n_pad, mp] broadcast never exists on the host.
+        ranks = jax.jit(
+            lambda: jnp.broadcast_to(jnp.arange(mp, dtype=jnp.int32),
+                                     (n_pad, mp)),
+            out_shardings=spec2d)()
+        lengths = np.zeros(n_pad, np.int32)
+        lengths[:h.n] = self._m_true
+        lengths = jax.device_put(lengths, NamedSharding(mesh, P(row_ax)))
+        return DeviceSnapshot.from_padded(ranks, svals, lengths, self.name)
+
+    def block_until_built(self) -> None:
+        if self._w_star is not None:
+            jax.block_until_ready(self._w_star)
+
+    def nbytes(self) -> int:
+        total = 0
+        if self._w_star is not None:
+            total += self._m_padded * self._m_padded * 4
+        if self._snap is not None:
+            total += self._snap.nbytes()
+        return total

@@ -17,9 +17,13 @@ them all behind one protocol:
 
 Backends register themselves under a string key (``register_backend``);
 ``build(h, backend="auto")`` consults a planner that picks a backend from
-the graph size, the label mass, and the expected query batch shape.
-Adding a new structure (a HypED-style threshold oracle, a sharded device
-engine, ...) is one registry entry — not a new public API.
+the graph size, the label mass, the expected query batch shape, and —
+when a ``mesh`` is passed — the device topology (a multi-device mesh
+whose line-graph closure exceeds the single-device budget routes to the
+``sharded`` backend).  Adding a new structure (a HypED-style threshold
+oracle, a sharded device engine, ...) is one registry entry — not a new
+public API.  The full backend catalogue, the planner policy, and the
+data-flow picture live in ``docs/ARCHITECTURE.md``.
 
 ``DeviceSnapshot`` generalizes ``HLIndex.as_padded``: any backend that can
 express its structure as per-vertex sorted (hub, s) label rows exports the
@@ -50,7 +54,13 @@ __all__ = [
     "register_backend", "available_backends", "plan_backend", "build",
     "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
     "ThresholdEngine", "MSTOracleEngine", "ClosureEngine",
+    "SINGLE_DEVICE_CLOSURE_BUDGET",
 ]
+
+# Per-device byte budget for the dense closure working set (operand plus
+# the two gathered panels, f32).  When a multi-device mesh is passed and
+# 12·m² exceeds this, the auto planner routes to the "sharded" backend.
+SINGLE_DEVICE_CLOSURE_BUDGET = 256 * 2**20
 
 class SnapshotUnsupported(NotImplementedError):
     """Raised by backends whose structure has no padded label form."""
@@ -62,7 +72,26 @@ class SnapshotUnsupported(NotImplementedError):
 
 @runtime_checkable
 class ReachabilityEngine(Protocol):
-    """The one query surface every backend serves."""
+    """The one query surface every backend serves.
+
+    Semantics (fixed across backends, cross-validated against the
+    ``mst-oracle`` reference in tests and benchmarks):
+
+    * ``mr(u, v)`` — Problem 2: the largest ``s`` such that an s-walk
+      joins vertices ``u`` and ``v``.  0 means unreachable at every
+      ``s >= 1``; for ``u == v`` it is the max incident hyperedge size
+      (a vertex trivially reaches itself through any incident edge).
+      Vertices with no incident hyperedge answer 0 everywhere.
+    * ``s_reach(u, v, s)`` — Problem 1: is there an s-walk joining
+      ``u`` and ``v``?  Always equals ``mr(u, v) >= s``.
+    * ``mr_batch(us, vs) -> int array [Q]`` / ``s_reach_batch(us, vs, s)
+      -> bool array [Q]`` — vectorized forms; ``us``/``vs`` are equal
+      length sequences of vertex ids.
+    * ``snapshot() -> DeviceSnapshot`` — the padded device-resident label
+      form (see ``repro.core.query``), or raises ``SnapshotUnsupported``
+      for structures with no label form (online search, frontier sweeps,
+      union-find components, the MST forest).
+    """
 
     name: str
 
@@ -108,6 +137,13 @@ class _EngineBase:
             f"backend {self.name!r} has no padded device form; query it "
             f"through mr_batch / s_reach_batch instead")
 
+    def block_until_built(self) -> None:
+        """Block until any device work dispatched by ``build`` is resident
+        (jax dispatch is asynchronous).  Backends whose build is host-side
+        (or already synchronous) inherit this no-op; async-building
+        backends (e.g. ``sharded``) override it so build timing and
+        serving hand-off are well-defined."""
+
     def nbytes(self) -> Optional[int]:
         """Resident index size in bytes, if the backend tracks one."""
         return None
@@ -136,10 +172,25 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
-def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None) -> str:
-    """Pick a backend from graph size, label mass, and query batch shape.
+def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
+                 mesh=None, device_budget_bytes: Optional[int] = None) -> str:
+    """Pick a backend from graph size, label mass, query batch shape, and
+    (optionally) the device topology.
 
-    Policy (documented in README.md):
+    Args:
+      h: the hypergraph to serve.
+      batch_hint: expected query batch size (None/0 = trickle queries).
+      mesh: an optional ``jax.sharding.Mesh``.  A mesh with more than one
+        device opts the workload into distribution: if the dense closure
+        working set (~12·m² bytes: operand + two gathered f32 panels)
+        exceeds ``device_budget_bytes``, the planner picks ``sharded``.
+        A unit mesh (1 device) never routes to ``sharded``.
+      device_budget_bytes: per-device memory budget for the closure
+        working set; defaults to ``SINGLE_DEVICE_CLOSURE_BUDGET``.
+
+    Policy (documented in README.md and docs/ARCHITECTURE.md):
+      * multi-device mesh + closure beyond one device -> ``sharded``
+        (2-D block-sharded semiring closure, mesh-sharded snapshot);
       * tiny line graphs with real batches -> dense semiring ``closure``
         (one fused device program, no per-root host traversal);
       * anything where HL-index construction is tractable -> ``hl-index``
@@ -151,6 +202,11 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None) -> str:
     q = int(batch_hint) if batch_hint else 0
     if h.m == 0:
         return "hl-index"
+    if mesh is not None and mesh.devices.size > 1:
+        budget = (SINGLE_DEVICE_CLOSURE_BUDGET if device_budget_bytes is None
+                  else int(device_budget_bytes))
+        if 12 * h.m * h.m > budget:
+            return "sharded"
     if h.m <= 256 and q >= 64:
         return "closure"
     # label mass proxy: construction walks ~nnz * avg-degree host work
@@ -162,21 +218,35 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None) -> str:
 
 
 def build(h: Hypergraph, backend: str = "auto", *,
-          batch_hint: Optional[int] = None, **opts) -> "ReachabilityEngine":
+          batch_hint: Optional[int] = None, mesh=None,
+          **opts) -> "ReachabilityEngine":
     """Build a reachability engine over ``h``.
 
-    ``backend`` is a registry key or ``"auto"``; ``batch_hint`` tells the
-    planner the expected query batch size.  Backend-specific options pass
-    through ``**opts`` (e.g. ``minimize_labels=False`` for "hl-index").
+    Args:
+      h: the hypergraph to serve.
+      backend: a registry key (see ``available_backends()``) or
+        ``"auto"`` to let ``plan_backend`` choose.
+      batch_hint: expected query batch size, consumed by the planner.
+      mesh: optional ``jax.sharding.Mesh``.  Consulted by the planner
+        (see ``plan_backend``) and forwarded to the ``sharded`` backend;
+        ignored by single-device backends.
+      **opts: backend-specific options, passed to the backend's
+        ``build`` (e.g. ``minimize_labels=False`` for "hl-index",
+        ``schedule="ring"`` for "sharded", ``device_budget_bytes`` for
+        the planner).
     """
+    budget = opts.pop("device_budget_bytes", None)
     if backend == "auto":
-        backend = plan_backend(h, batch_hint)
+        backend = plan_backend(h, batch_hint, mesh=mesh,
+                               device_budget_bytes=budget)
     try:
         cls = _REGISTRY[backend]
     except KeyError:
         raise ValueError(
             f"unknown backend {backend!r}; available: {available_backends()}"
         ) from None
+    if mesh is not None and backend == "sharded":
+        opts.setdefault("mesh", mesh)
     return cls.build(h, **opts)
 
 
@@ -439,3 +509,11 @@ class ClosureEngine(_EngineBase):
 
     def nbytes(self) -> int:
         return int(self.w_star.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device backend — lives in distributed.py; importing it here
+# registers "sharded" so the registry is complete after `import engine`.
+# ---------------------------------------------------------------------------
+
+from . import distributed as _distributed  # noqa: E402,F401

@@ -1,12 +1,23 @@
 """HL-index maintenance under hyperedge updates (paper §V-D).
 
 The paper sketches insert/delete maintenance but defers the algorithm;
-we implement the **component-scoped rebuild**: labels never cross
+we implement a **component-scoped label splice**: labels never cross
 connected components of the line graph (a walk cannot leave a component),
 so an insertion/deletion only invalidates labels whose *hub* lies in the
-touched component(s).  The rebuild re-runs the fast construction
-restricted to those hyperedges — typically a small fraction of the graph
-— and is exactly equivalent to a full rebuild (asserted in tests).
+touched component(s).  ``_rebuild_scoped`` keeps every surviving label
+(hub outside the affected set) from the old index and takes fresh labels
+only for affected hubs.
+
+Honesty note on cost: the *label content* is scoped, but the
+*construction* is not — ``_rebuild_scoped`` currently calls
+``build_fast`` on the **full** new graph and then discards the labels it
+splices over.  Maintenance is therefore exactly equivalent to a full
+rebuild in answers (asserted in tests) and in asymptotic build time; the
+win is limited to preserving the untouched components' label arrays
+(and their minimization state) byte-for-byte.  Running construction
+restricted to the affected sub-line-graph — the actual speed-up — needs
+subgraph extraction plus hub-rank remapping and is still open (see
+ROADMAP.md).
 
 Limitation (recorded): hyperedge importance is recomputed globally, so an
 update that changes vertex degrees can reorder *other* components'

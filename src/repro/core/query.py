@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,12 +85,26 @@ def mr_query_dicts(lu: Dict[int, int], lv: Dict[int, int],
 class DeviceSnapshot:
     """Padded per-vertex label tensors on device, served by ``batched_mr``.
 
-    ``ranks`` [n, Lmax] int32 ascending per row (INT32_MAX padding),
-    ``svals`` [n, Lmax] int32 (0 padding), ``lengths`` [n] int32.  The row
-    key space only needs to be consistent across rows (hub importance rank
-    for the HL-index/ETE backends, raw hub id for the dense closure) —
-    this is the one device-resident serving form every label-shaped
-    backend of ``repro.core.engine`` exports.
+    Tensor layout and sentinel conventions:
+
+    * ``ranks`` [n, Lmax] int32 — per-row **ascending** hub keys; rows
+      shorter than Lmax are padded with ``INT32_MAX`` (2^31 - 1).  The
+      padding sentinel can never equal a real hub key, so a padding slot
+      only ever "matches" another padding slot — and then contributes
+      ``min(0, 0) = 0`` to the join max, i.e. nothing.
+    * ``svals`` [n, Lmax] int32 — the s-value carried by each label;
+      padding slots hold 0 (0 = "no s-walk", the identity of the max).
+    * ``lengths`` [n] int32 — true label counts per row (metadata for
+      size accounting; the join itself relies only on the sentinels).
+
+    The row key space only needs to be consistent across rows (hub
+    importance rank for the HL-index/ETE backends, raw hyperedge id for
+    the dense/sharded closures) — this is the one device-resident serving
+    form every label-shaped backend of ``repro.core.engine`` exports.
+
+    ``to_mesh`` re-lands the same tensors sharded over a device mesh via
+    ``NamedSharding``, so one snapshot can outlive (and serve) any number
+    of query batches on a multi-device topology.
     """
 
     ranks: jnp.ndarray
@@ -108,6 +122,45 @@ class DeviceSnapshot:
                      backend: str = "hl-index") -> "DeviceSnapshot":
         ranks, svals, lengths = idx.as_padded()
         return cls.from_padded(ranks, svals, lengths, backend)
+
+    def to_mesh(self, mesh, axes: Optional[Tuple[str, str]] = None
+                ) -> "DeviceSnapshot":
+        """Return this snapshot sharded over ``mesh`` via ``NamedSharding``:
+        vertex rows split along ``axes[0]``, label columns along
+        ``axes[1]`` (``lengths`` along ``axes[0]`` only).  ``axes=None``
+        uses the mesh's last two axis names, so any axis naming works.
+
+        Rows/columns are padded up to mesh-divisible sizes with the usual
+        sentinels (ranks ``INT32_MAX``, svals 0), which are inert under
+        the join — so the sharded snapshot answers identically.  The
+        returned snapshot is committed to the mesh's devices and persists
+        there across query batches; ``batched_mr`` consumes it directly
+        (GSPMD partitions the gather + join).
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if axes is None:
+            axes = tuple(mesh.axis_names[-2:])
+        if len(axes) < 2:
+            raise ValueError(
+                f"to_mesh needs two mesh axes (rows, label columns); the "
+                f"mesh has axis names {mesh.axis_names}")
+        row_ax, col_ax = axes
+        r, c = mesh.shape[row_ax], mesh.shape[col_ax]
+        n, lmax = self.ranks.shape
+        n_pad = -(-n // r) * r if n else 0
+        l_pad = -(-lmax // c) * c if lmax else 0
+        ranks = np.full((n_pad, l_pad), np.iinfo(np.int32).max, np.int32)
+        svals = np.zeros((n_pad, l_pad), np.int32)
+        lengths = np.zeros(n_pad, np.int32)
+        ranks[:n, :lmax] = np.asarray(self.ranks)
+        svals[:n, :lmax] = np.asarray(self.svals)
+        lengths[:n] = np.asarray(self.lengths)
+        spec2d = NamedSharding(mesh, P(row_ax, col_ax))
+        return DeviceSnapshot(
+            ranks=jax.device_put(ranks, spec2d),
+            svals=jax.device_put(svals, spec2d),
+            lengths=jax.device_put(lengths, NamedSharding(mesh, P(row_ax))),
+            backend=self.backend)
 
     @property
     def lmax(self) -> int:

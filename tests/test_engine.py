@@ -138,6 +138,103 @@ def test_as_padded_empty_labels():
 # satellite: deprecated aliases still resolve (loudly)
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# sharded backend: multi-device meshes (subprocess — the host device count
+# must be forced before jax init), unit-axis degradation, mesh-aware planner
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_sharded_backend_on_host_mesh(n_devices):
+    from util_subproc import run_with_devices
+    out = run_with_devices("""
+import numpy as np
+from repro.api import build_engine, plan_backend, random_hypergraph
+from repro.core import MSTOracle
+from repro.core.distributed import default_line_graph_mesh
+
+h = random_hypergraph(40, 30, seed=5)
+oracle = MSTOracle(h)
+rng = np.random.default_rng(1)
+us, vs = rng.integers(0, h.n, 64), rng.integers(0, h.n, 64)
+want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)], np.int64)
+
+mesh = default_line_graph_mesh()
+assert mesh.devices.size == %(nd)d, mesh
+for sched in ("allgather", "ring"):
+    eng = build_engine(h, "sharded", mesh=mesh, schedule=sched)
+    assert eng.name == "sharded"
+    got = np.asarray(eng.mr_batch(us, vs)).astype(np.int64)
+    assert np.array_equal(got, want), sched
+    for s in (1, 2, 3):
+        assert np.array_equal(np.asarray(eng.s_reach_batch(us, vs, s)),
+                              want >= s), sched
+    for u, v, w in zip(us[:8], vs[:8], want[:8]):
+        assert eng.mr(int(u), int(v)) == int(w)
+        assert eng.s_reach(int(u), int(v), 2) == (int(w) >= 2)
+    # the snapshot is built once and survives across query batches
+    assert eng.snapshot() is eng.snapshot()
+    assert eng.nbytes() > 0
+
+# mesh-aware planner: sharded iff the mesh is multi-device AND the
+# closure exceeds the single-device budget
+assert plan_backend(h) != "sharded"
+picked = plan_backend(h, mesh=mesh, device_budget_bytes=0)
+assert (picked == "sharded") == (mesh.devices.size > 1), picked
+assert plan_backend(h, 64, mesh=mesh, device_budget_bytes=1 << 40) == "closure"
+if mesh.devices.size > 1:
+    eng = build_engine(h, "auto", mesh=mesh, device_budget_bytes=0)
+    assert eng.name == "sharded"
+    assert np.array_equal(np.asarray(eng.mr_batch(us, vs)).astype(np.int64),
+                          want)
+
+# generic label snapshots reshard losslessly through to_mesh
+hl = build_engine(h, "hl-index")
+snap = hl.snapshot()
+sh = snap.to_mesh(mesh)
+assert np.array_equal(np.asarray(sh.mr(us, vs)), np.asarray(snap.mr(us, vs)))
+assert sh.backend == "hl-index"
+print("OK")
+""" % {"nd": n_devices}, n_devices=n_devices)
+    assert "OK" in out
+
+
+def test_sharded_unit_axis_mesh_degrades():
+    # a (1, 1) mesh runs in-process on the single test device: the
+    # collectives become no-ops and answers are unchanged
+    from repro.api import make_mesh
+    h = random_hypergraph(25, 20, seed=9)
+    from repro.core import MSTOracle
+    oracle = MSTOracle(h)
+    rng = np.random.default_rng(2)
+    us, vs = rng.integers(0, h.n, 40), rng.integers(0, h.n, 40)
+    want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)],
+                    np.int64)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for sched in ("allgather", "ring"):
+        eng = build_engine(h, "sharded", mesh=mesh, schedule=sched)
+        np.testing.assert_array_equal(
+            np.asarray(eng.mr_batch(us, vs)).astype(np.int64), want)
+
+
+def test_planner_never_sharded_without_multi_device_mesh():
+    from repro.api import make_mesh
+    h = random_hypergraph(30, 45, seed=3)
+    # no mesh: sharded is unreachable regardless of budget
+    for hint in (None, 8, 10_000):
+        assert plan_backend(h, hint, device_budget_bytes=0) != "sharded"
+    # unit mesh: still unreachable (1 device = nothing to shard over)
+    mesh1 = make_mesh((1, 1), ("data", "model"))
+    assert plan_backend(h, mesh=mesh1, device_budget_bytes=0) != "sharded"
+
+
+def test_sharded_empty_hypergraph():
+    h = from_edge_lists([], n=5)
+    eng = build_engine(h, "sharded")
+    assert eng.mr(0, 4) == 0
+    np.testing.assert_array_equal(eng.mr_batch([0, 1], [2, 3]),
+                                  np.zeros(2, np.int64))
+
+
 def test_deprecated_frontier_aliases():
     import repro.core as core
     import repro.core.frontier as frontier

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs consistency guard (run by the CI `docs` job).
+
+Two checks, so documentation cannot silently drift from the code:
+
+1. Every relative markdown link in README.md and docs/*.md resolves to
+   an existing file or directory.
+2. Every backend name in the live engine registry
+   (`repro.api.available_backends()`) appears as a row in the backend
+   table of docs/ARCHITECTURE.md — registering a backend without
+   documenting it fails the build.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```.*?```", re.S)
+_TABLE_ROW = re.compile(r"^\|\s*`([^`]+)`", re.M)
+
+
+def doc_files():
+    docs = ROOT / "docs"
+    return [ROOT / "README.md"] + (sorted(docs.glob("*.md"))
+                                   if docs.is_dir() else [])
+
+
+def check_links():
+    problems = []
+    for md in doc_files():
+        text = _FENCE.sub("", md.read_text())
+        for match in _LINK.finditer(text):
+            target = match.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#")[0]
+            if path and not (md.parent / path).exists():
+                problems.append(
+                    f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return problems
+
+
+def check_backend_table():
+    from repro.api import available_backends
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    documented = set(_TABLE_ROW.findall(arch.read_text()))
+    return [f"docs/ARCHITECTURE.md backend table is missing registered "
+            f"backend `{name}`"
+            for name in available_backends() if name not in documented]
+
+
+def main() -> int:
+    problems = check_links() + check_backend_table()
+    for p in problems:
+        print(f"FAIL: {p}")
+    if problems:
+        return 1
+    from repro.api import available_backends
+    print(f"docs OK: links resolve in {len(doc_files())} files; "
+          f"backend table covers {available_backends()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
