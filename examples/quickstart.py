@@ -55,6 +55,27 @@ def main():
           f"max MR in batch = {ans.max()}")
     print("registered backends:", ", ".join(available_backends()))
 
+    # --- live updates: scoped maintenance through the same engine ---------
+    # construction reruns only on the affected line-graph component, so
+    # on a multi-component graph updates cost ~1/C of a rebuild
+    # (benchmarks/bench_maintenance.py tracks this as BENCH_maintenance.json)
+    from repro.api import planted_chain_hypergraph
+    hc = planted_chain_hypergraph(16, 40, overlap=3, extra_size=2, seed=0)
+    t0 = time.perf_counter()
+    ec = build_engine(hc, backend="hl-index")
+    t_build_c = time.perf_counter() - t0
+    snap_c = ec.snapshot()
+    anchor = [int(v) for v in hc.edge(0)[:2]]
+    t0 = time.perf_counter()
+    ec.update(inserts=[anchor + [hc.n]], deletes=[hc.m - 1])
+    t_upd = time.perf_counter() - t0
+    print(f"\nupdate on {hc.m}-edge, 16-component graph "
+          f"(1 insert + 1 delete): {t_upd*1e3:.1f} ms scoped vs "
+          f"{t_build_c*1e3:.0f} ms full build "
+          f"({t_build_c/t_upd:.0f}x); engine version -> {ec.version} "
+          f"(old snapshots are stale: {snap_c.version} != {ec.version})")
+    assert ec.snapshot() is not snap_c    # re-derived, serves new answers
+
 
 if __name__ == "__main__":
     main()

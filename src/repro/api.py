@@ -16,6 +16,20 @@ Examples, benchmarks, and the cross-validation suite all route through
 this module, so a new backend is one ``register_backend`` entry away from
 being benchmarked and validated.
 
+Hyperedge updates go through the same engine — no rebuilding by hand:
+
+    eng.update(inserts=[[3, 7, 9]], deletes=[4])   # in place
+    eng.mr(u, v)                     # answers == full rebuild
+    snap2 = eng.snapshot()           # fresh (the old snapshot is stale:
+                                     #  snap.version != eng.version)
+
+``update_capabilities()`` maps each backend to how it absorbs updates:
+scoped construction on the affected line-graph component(s)
+(``hl-index``/``hl-index-basic``), 1-hop adjacency-cache patches
+(``online``/``frontier``), whole-structure recompute behind the same
+call (``closure``/``sharded``), or ``UpdateUnsupported`` (the static
+baselines).
+
 Multi-device serving goes through the same two calls — build a mesh and
 pass it:
 
@@ -35,7 +49,8 @@ from __future__ import annotations
 
 from repro.compat import make_mesh
 from repro.core.engine import (ReachabilityEngine, DeviceSnapshot,
-                               SnapshotUnsupported, available_backends,
+                               SnapshotUnsupported, UpdateUnsupported,
+                               available_backends, update_capabilities,
                                plan_backend, register_backend)
 from repro.core.engine import build as build_engine
 from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
@@ -45,7 +60,8 @@ from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
 
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
-    "build_engine", "available_backends", "plan_backend", "register_backend",
+    "UpdateUnsupported", "build_engine", "available_backends",
+    "update_capabilities", "plan_backend", "register_backend",
     "make_mesh",
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",

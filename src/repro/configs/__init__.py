@@ -6,7 +6,6 @@ returns a same-family reduction that runs a forward/train step on CPU.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Dict, List
 

@@ -10,6 +10,7 @@ should go through the unified facade in ``repro.api`` /
 ``repro.core.engine`` instead of either raw function.
 """
 from .hypergraph import (Hypergraph, from_edge_lists, compact,
+                         induced_subhypergraph, apply_edge_edits,
                          random_hypergraph, planted_chain_hypergraph,
                          colocation_hypergraph, paper_figure1)
 from .online import mr_online, precompute_neighbors, NeighborCache
@@ -22,15 +23,18 @@ from .semiring import (maxmin_matmul, maxmin_closure, boolean_closure,
                        vertex_mr_from_edge_mr, distinct_thresholds)
 from .baselines import (vtv_query, ETEIndex, build_ete,
                         ThresholdComponentIndex, MSTOracle, line_graph_edges)
-from .maintenance import insert_hyperedge, delete_hyperedge, component_of
+from .maintenance import (insert_hyperedge, delete_hyperedge, apply_updates,
+                          component_of)
 from .frontier import (SparseLineGraph, frontier_batched_s_reach,
                        frontier_batched_mr)
 from .engine import (ReachabilityEngine, DeviceSnapshot, SnapshotUnsupported,
-                     register_backend, available_backends, plan_backend)
+                     UpdateUnsupported, register_backend, available_backends,
+                     update_capabilities, plan_backend)
 from .engine import build as build_engine
 
 __all__ = [
-    "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
+    "Hypergraph", "from_edge_lists", "compact", "induced_subhypergraph",
+    "apply_edge_edits", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
     "mr_online", "precompute_neighbors", "NeighborCache",
     "HLIndex", "build_basic", "build_fast", "minimize", "exact_minimize",
@@ -40,10 +44,11 @@ __all__ = [
     "vertex_mr_from_edge_mr", "distinct_thresholds",
     "vtv_query", "ETEIndex", "build_ete", "ThresholdComponentIndex",
     "MSTOracle", "line_graph_edges",
-    "insert_hyperedge", "delete_hyperedge", "component_of",
+    "insert_hyperedge", "delete_hyperedge", "apply_updates", "component_of",
     "SparseLineGraph", "frontier_batched_s_reach", "frontier_batched_mr",
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
-    "register_backend", "available_backends", "plan_backend", "build_engine",
+    "UpdateUnsupported", "register_backend", "available_backends",
+    "update_capabilities", "plan_backend", "build_engine",
 ]
 
 

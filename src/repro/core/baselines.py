@@ -18,12 +18,12 @@
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from .hypergraph import Hypergraph
-from .hlindex import HLIndex, _Builder
+from .hlindex import _Builder
 
 __all__ = ["vtv_query", "ETEIndex", "build_ete", "ThresholdComponentIndex",
            "MSTOracle", "line_graph_edges"]

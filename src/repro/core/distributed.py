@@ -293,17 +293,32 @@ class ShardedEngine(_EngineBase):
     """
 
     name = "sharded"
+    update_capability = "rebuild"
 
     def __init__(self, h, mesh: Mesh, axes: Tuple[str, str],
-                 schedule: str, w_star_padded, m_true: int):
+                 schedule: str, w_star_padded, m_true: int,
+                 rounds: Optional[int] = None):
         super().__init__(h)
         self.mesh = mesh
         self.axes = axes
         self.schedule = schedule
+        self.rounds = rounds
         self._w_star = w_star_padded       # [mp, mp] sharded P(*axes)
         self._m_padded = int(w_star_padded.shape[0])
         self._m_true = m_true
         self._snap: Optional[DeviceSnapshot] = None
+
+    @staticmethod
+    def _closure_of(h, mesh, axes, schedule, rounds):
+        """(padded sharded W*, m_true) for ``h`` — build and update share
+        this so an updated engine is bit-identical to a rebuilt one."""
+        if h.m == 0:
+            return jnp.zeros((0, 0), jnp.float32), 0
+        w = h.line_graph(np.int32).astype(np.float32)
+        w_star = sharded_maxmin_closure(w, mesh, rounds=rounds,
+                                        schedule=schedule, axes=axes,
+                                        trim=False)
+        return w_star, h.m
 
     @classmethod
     def build(cls, h, *, mesh: Optional[Mesh] = None,
@@ -325,14 +340,20 @@ class ShardedEngine(_EngineBase):
             raise ValueError(
                 f"the sharded backend needs a mesh with >= 2 axes to 2-D "
                 f"block-shard over; got axis names {mesh.axis_names}")
-        if h.m == 0:
-            return cls(h, mesh, axes, schedule,
-                       jnp.zeros((0, 0), jnp.float32), 0)
-        w = h.line_graph(np.int32).astype(np.float32)
-        w_star = sharded_maxmin_closure(w, mesh, rounds=rounds,
-                                        schedule=schedule, axes=axes,
-                                        trim=False)
-        return cls(h, mesh, axes, schedule, w_star, h.m)
+        w_star, m_true = cls._closure_of(h, mesh, axes, schedule, rounds)
+        return cls(h, mesh, axes, schedule, w_star, m_true, rounds)
+
+    def update(self, inserts=(), deletes=()) -> None:
+        """Recompute the block-sharded closure for the edited graph on the
+        same mesh/schedule (no incremental form for dense closures) and
+        invalidate the mesh-sharded snapshot so the next ``snapshot()`` /
+        ``to_mesh`` re-derives a coherent one."""
+        from .hypergraph import apply_edge_edits
+        new_h, _, _ = apply_edge_edits(self.h, inserts, deletes)
+        self._w_star, self._m_true = self._closure_of(
+            new_h, self.mesh, self.axes, self.schedule, self.rounds)
+        self._m_padded = int(self._w_star.shape[0])
+        self._graph_changed(new_h)
 
     # -- queries: everything routes through the resident snapshot --------
 
@@ -363,7 +384,7 @@ class ShardedEngine(_EngineBase):
         if self._m_true == 0 or h.n == 0:
             z = np.zeros((h.n, 0), np.int32)
             return DeviceSnapshot.from_padded(z, z, np.zeros(h.n, np.int32),
-                                              self.name)
+                                              self.name, version=self.version)
         mp = self._m_padded
         n_pad = _round_up(h.n, mesh.shape[row_ax])
         deg = np.diff(h.v_ptr)
@@ -404,7 +425,8 @@ class ShardedEngine(_EngineBase):
         lengths = np.zeros(n_pad, np.int32)
         lengths[:h.n] = self._m_true
         lengths = jax.device_put(lengths, NamedSharding(mesh, P(row_ax)))
-        return DeviceSnapshot.from_padded(ranks, svals, lengths, self.name)
+        return DeviceSnapshot.from_padded(ranks, svals, lengths, self.name,
+                                          version=self.version)
 
     def block_until_built(self) -> None:
         if self._w_star is not None:

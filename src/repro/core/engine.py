@@ -31,16 +31,39 @@ same padded tensors, and every snapshot is served by the same fused
 ``batched_mr`` join.  Backends with no label form (online search, frontier
 sweeps, union-find components, the MST forest) raise
 ``SnapshotUnsupported`` — their batch paths run through their own engines.
+
+Hyperedge updates go through the same protocol: ``engine.update(inserts,
+deletes)`` mutates the engine in place to serve the edited graph.  Each
+backend declares how via its ``update_capability`` class attribute
+(surfaced by ``update_capabilities()`` and CI-checked against the table
+in docs/ARCHITECTURE.md):
+
+* ``"scoped"`` — construction reruns only on the affected line-graph
+  component(s) and is spliced into the surviving structure
+  (``hl-index``, ``hl-index-basic`` via ``repro.core.maintenance``);
+* ``"incremental"`` — adjacency caches are patched on the 1-hop touched
+  set, no construction at all (``online``, ``frontier``);
+* ``"rebuild"`` — the structure is recomputed whole, but through the
+  same call so serving code never special-cases it (``closure``,
+  ``sharded``);
+* ``"unsupported"`` — ``update`` raises ``UpdateUnsupported`` (the
+  static baselines: ``ete``, ``threshold``, ``mst-oracle``).
+
+Every successful update bumps ``engine.version`` and invalidates the
+cached ``DeviceSnapshot`` — snapshots carry the version they were
+derived from, so staleness is detectable even after ``to_mesh``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
-from .hypergraph import Hypergraph
+from .hypergraph import Hypergraph, apply_edge_edits
 from .hlindex import HLIndex, build_basic, build_fast, pad_label_rows
 from .minimal import minimize
+from .maintenance import apply_updates
 from .query import DeviceSnapshot, mr_query, s_reach_query
 from .online import NeighborCache, mr_online
 from .frontier import (SparseLineGraph, frontier_batched_mr,
@@ -51,7 +74,8 @@ from .semiring import mr_matrix, vertex_mr_from_edge_mr
 
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
-    "register_backend", "available_backends", "plan_backend", "build",
+    "UpdateUnsupported", "register_backend", "available_backends",
+    "update_capabilities", "plan_backend", "build",
     "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
     "ThresholdEngine", "MSTOracleEngine", "ClosureEngine",
     "SINGLE_DEVICE_CLOSURE_BUDGET",
@@ -64,6 +88,12 @@ SINGLE_DEVICE_CLOSURE_BUDGET = 256 * 2**20
 
 class SnapshotUnsupported(NotImplementedError):
     """Raised by backends whose structure has no padded label form."""
+
+
+class UpdateUnsupported(NotImplementedError):
+    """Raised by backends whose structure cannot absorb hyperedge
+    updates (``update_capability == "unsupported"``) — rebuild the
+    engine via ``build`` instead."""
 
 
 # ---------------------------------------------------------------------------
@@ -91,15 +121,23 @@ class ReachabilityEngine(Protocol):
       form (see ``repro.core.query``), or raises ``SnapshotUnsupported``
       for structures with no label form (online search, frontier sweeps,
       union-find components, the MST forest).
+    * ``update(inserts, deletes)`` — mutate the engine in place so it
+      serves the edited hypergraph (semantics identical to rebuilding
+      from scratch, asserted in tests), or raise ``UpdateUnsupported``.
+      ``update_capability`` ∈ {"scoped", "incremental", "rebuild",
+      "unsupported"} declares how; ``version`` counts successful updates
+      so snapshot staleness is detectable.
     """
 
     name: str
+    update_capability: str
 
     def mr(self, u: int, v: int) -> int: ...
     def s_reach(self, u: int, v: int, s: int) -> bool: ...
     def mr_batch(self, us, vs) -> np.ndarray: ...
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray: ...
     def snapshot(self) -> DeviceSnapshot: ...
+    def update(self, inserts=(), deletes=()) -> None: ...
 
 
 class _EngineBase:
@@ -111,9 +149,11 @@ class _EngineBase:
     """
 
     name = "base"
+    update_capability = "unsupported"
 
     def __init__(self, h: Hypergraph):
         self.h = h
+        self.version = 0
 
     @classmethod
     def build(cls, h: Hypergraph, **opts) -> "ReachabilityEngine":
@@ -121,6 +161,19 @@ class _EngineBase:
 
     def mr(self, u: int, v: int) -> int:
         raise NotImplementedError
+
+    def update(self, inserts=(), deletes=()) -> None:
+        raise UpdateUnsupported(
+            f"backend {self.name!r} does not maintain its structure under "
+            f"hyperedge updates; build a fresh engine instead")
+
+    def _graph_changed(self, new_h: Hypergraph) -> None:
+        """Install the edited graph, bump ``version``, and drop any cached
+        snapshot so the next ``snapshot()`` re-derives a current one."""
+        self.h = new_h
+        self.version += 1
+        if getattr(self, "_snap", None) is not None:
+            self._snap = None
 
     def s_reach(self, u: int, v: int, s: int) -> bool:
         return self.mr(u, v) >= s
@@ -172,6 +225,15 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def update_capabilities() -> Dict[str, str]:
+    """Registry key -> declared ``update(inserts, deletes)`` capability
+    ("scoped" | "incremental" | "rebuild" | "unsupported").  The table in
+    docs/ARCHITECTURE.md is CI-checked against this (tools/check_docs.py).
+    """
+    return {name: getattr(cls, "update_capability", "unsupported")
+            for name, cls in sorted(_REGISTRY.items())}
+
+
 def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
                  mesh=None, device_budget_bytes: Optional[int] = None) -> str:
     """Pick a backend from graph size, label mass, query batch shape, and
@@ -202,7 +264,11 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
     q = int(batch_hint) if batch_hint else 0
     if h.m == 0:
         return "hl-index"
-    if mesh is not None and mesh.devices.size > 1:
+    if (mesh is not None and mesh.devices.size > 1
+            and len(mesh.axis_names) >= 2):
+        # sharded needs two mesh axes to 2-D block-shard over; a 1-D mesh
+        # falls through to the single-device policy rather than routing
+        # to a backend that cannot be built on it
         budget = (SINGLE_DEVICE_CLOSURE_BUDGET if device_budget_bytes is None
                   else int(device_budget_bytes))
         if 12 * h.m * h.m > budget:
@@ -257,13 +323,21 @@ def build(h: Hypergraph, backend: str = "auto", *,
 @register_backend("hl-index")
 class HLIndexEngine(_EngineBase):
     """Algorithm 3 (+ Algorithm 4 minimization) served by Algorithm 5
-    merge-joins; batches run on the padded device snapshot."""
+    merge-joins; batches run on the padded device snapshot.  Updates are
+    component-scoped: construction reruns only on the affected line-graph
+    component(s) and is spliced into the surviving labels
+    (``repro.core.maintenance``)."""
 
     name = "hl-index"
+    update_capability = "scoped"
 
-    def __init__(self, h: Hypergraph, idx: HLIndex):
+    def __init__(self, h: Hypergraph, idx: HLIndex,
+                 builder: Callable[[Hypergraph], HLIndex] = build_fast,
+                 minimizer: Optional[Callable[[HLIndex], HLIndex]] = None):
         super().__init__(h)
         self.idx = idx
+        self._builder = builder          # scoped-update (re)construction
+        self._minimizer = minimizer      # applied to the sub-index too
         self._snap: Optional[DeviceSnapshot] = None
 
     @classmethod
@@ -275,7 +349,7 @@ class HLIndexEngine(_EngineBase):
         idx = index if index is not None else build_fast(h)
         if minimize_labels:
             idx = minimize(idx)
-        return cls(h, idx)
+        return cls(h, idx, minimizer=minimize if minimize_labels else None)
 
     def mr(self, u: int, v: int) -> int:
         return mr_query(self.idx, int(u), int(v))
@@ -291,8 +365,15 @@ class HLIndexEngine(_EngineBase):
 
     def snapshot(self) -> DeviceSnapshot:
         if self._snap is None:
-            self._snap = DeviceSnapshot.from_hlindex(self.idx, self.name)
+            self._snap = DeviceSnapshot.from_hlindex(self.idx, self.name,
+                                                     version=self.version)
         return self._snap
+
+    def update(self, inserts=(), deletes=()) -> None:
+        new_h, self.idx = apply_updates(self.h, self.idx, inserts, deletes,
+                                        builder=self._builder,
+                                        minimizer=self._minimizer)
+        self._graph_changed(new_h)
 
     def nbytes(self) -> int:
         return self.idx.nbytes()
@@ -301,14 +382,16 @@ class HLIndexEngine(_EngineBase):
 @register_backend("hl-index-basic")
 class HLIndexBasicEngine(HLIndexEngine):
     """Algorithm 2 construction (no MCD/neighbor-index pruning, no
-    minimization) — the ablation baseline, same query paths."""
+    minimization) — the ablation baseline, same query and scoped-update
+    paths (updates rebuild the affected components with Algorithm 2)."""
 
     name = "hl-index-basic"
 
     @classmethod
     def build(cls, h: Hypergraph, *,
               cover_check: bool = True) -> "HLIndexBasicEngine":
-        return cls(h, build_basic(h, cover_check=cover_check))
+        builder = functools.partial(build_basic, cover_check=cover_check)
+        return cls(h, builder(h), builder=builder)
 
 
 # ---------------------------------------------------------------------------
@@ -318,9 +401,11 @@ class HLIndexBasicEngine(HLIndexEngine):
 @register_backend("online")
 class OnlineEngine(_EngineBase):
     """Algorithm 1 bidirectional search (the paper's Base*); zero build
-    cost beyond the optional neighbor cache."""
+    cost beyond the optional neighbor cache, which updates patch on the
+    1-hop touched set only."""
 
     name = "online"
+    update_capability = "incremental"
 
     def __init__(self, h: Hypergraph, cache: Optional[NeighborCache]):
         super().__init__(h)
@@ -333,6 +418,13 @@ class OnlineEngine(_EngineBase):
     def mr(self, u: int, v: int) -> int:
         return mr_online(self.h, int(u), int(v), self.cache)
 
+    def update(self, inserts=(), deletes=()) -> None:
+        new_h, old_to_new, touched = apply_edge_edits(self.h, inserts,
+                                                      deletes)
+        if self.cache is not None:
+            self.cache = self.cache.updated(new_h, old_to_new, touched)
+        self._graph_changed(new_h)
+
     def nbytes(self) -> Optional[int]:
         return self.cache.nbytes() if self.cache is not None else 0
 
@@ -344,6 +436,7 @@ class FrontierEngine(_EngineBase):
     (None = |E|, exact)."""
 
     name = "frontier"
+    update_capability = "incremental"
 
     def __init__(self, h: Hypergraph, g: SparseLineGraph,
                  rounds: Optional[int]):
@@ -355,6 +448,12 @@ class FrontierEngine(_EngineBase):
     def build(cls, h: Hypergraph, *,
               rounds: Optional[int] = None) -> "FrontierEngine":
         return cls(h, SparseLineGraph(h), rounds)
+
+    def update(self, inserts=(), deletes=()) -> None:
+        new_h, old_to_new, touched = apply_edge_edits(self.h, inserts,
+                                                      deletes)
+        self.g = self.g.updated(new_h, old_to_new, touched)
+        self._graph_changed(new_h)
 
     def mr(self, u: int, v: int) -> int:
         return int(self.mr_batch([int(u)], [int(v)])[0])
@@ -406,7 +505,8 @@ class ETEEngine(_EngineBase):
             ranks, svals, lengths = pad_label_rows([r for r, _ in merged],
                                                    [s for _, s in merged])
             self._snap = DeviceSnapshot.from_padded(ranks, svals, lengths,
-                                                    self.name)
+                                                    self.name,
+                                                    version=self.version)
         return self._snap
 
     def nbytes(self) -> int:
@@ -466,15 +566,25 @@ class ClosureEngine(_EngineBase):
     """
 
     name = "closure"
+    update_capability = "rebuild"
 
-    def __init__(self, h: Hypergraph, w_star: np.ndarray):
+    def __init__(self, h: Hypergraph, w_star: np.ndarray,
+                 method: str = "maxmin"):
         super().__init__(h)
         self.w_star = w_star
+        self._method = method
         self._snap: Optional[DeviceSnapshot] = None
 
     @classmethod
     def build(cls, h: Hypergraph, *, method: str = "maxmin") -> "ClosureEngine":
-        return cls(h, mr_matrix(h, method=method))
+        return cls(h, mr_matrix(h, method=method), method)
+
+    def update(self, inserts=(), deletes=()) -> None:
+        # dense closures have no cheap incremental form (one new overlap
+        # can rewrite O(m²) entries); recompute whole, same protocol
+        new_h, _, _ = apply_edge_edits(self.h, inserts, deletes)
+        self.w_star = mr_matrix(new_h, method=self._method)
+        self._graph_changed(new_h)
 
     def mr(self, u: int, v: int) -> int:
         # scalar lookups stay on the host matrix (no reason to build the
@@ -504,7 +614,8 @@ class ClosureEngine(_EngineBase):
             ranks = np.broadcast_to(np.arange(m, dtype=np.int32), (h.n, m))
             lengths = np.full(h.n, m, np.int32)
             self._snap = DeviceSnapshot.from_padded(np.ascontiguousarray(ranks),
-                                                    svals, lengths, self.name)
+                                                    svals, lengths, self.name,
+                                                    version=self.version)
         return self._snap
 
     def nbytes(self) -> int:

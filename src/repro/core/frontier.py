@@ -53,11 +53,19 @@ def __getattr__(name: str):
 
 
 class SparseLineGraph:
-    """Symmetrized line-graph edge list on device."""
+    """Symmetrized line-graph edge list on device.
 
-    def __init__(self, h: Hypergraph):
-        src, dst, od = line_graph_edges(h)
+    The unsymmetrized host COO half-list is kept (``_coo``) so hyperedge
+    updates can patch the structure incrementally (``updated``) instead
+    of re-walking every neighborhood.
+    """
+
+    def __init__(self, h: Hypergraph,
+                 _coo: Optional[Tuple[np.ndarray, np.ndarray,
+                                      np.ndarray]] = None):
+        src, dst, od = line_graph_edges(h) if _coo is None else _coo
         self.h = h
+        self._coo = (src, dst, od)
         self.src = jnp.asarray(np.concatenate([src, dst]), jnp.int32)
         self.dst = jnp.asarray(np.concatenate([dst, src]), jnp.int32)
         self.od = jnp.asarray(np.concatenate([od, od]), jnp.int32)
@@ -65,6 +73,39 @@ class SparseLineGraph:
         self.thresholds = np.unique(np.concatenate(
             [np.asarray(od), np.asarray(h.edge_sizes)]))
         self.thresholds = self.thresholds[self.thresholds > 0]
+
+    def updated(self, new_h: Hypergraph, old_to_new: np.ndarray,
+                touched) -> "SparseLineGraph":
+        """Line graph of the edited hypergraph, patched incrementally:
+        pairs with both endpoints outside ``touched`` (new ids — see
+        ``apply_edge_edits``) are kept with ids remapped; overlaps are
+        recomputed only for the 1-hop touched set.  Overlap degrees of
+        untouched pairs cannot have changed (both endpoint vertex sets
+        are unchanged), so the splice is exact."""
+        src, dst, od = self._coo
+        if new_h.m == 0:                # graph emptied: no line graph left
+            empty = np.empty(0, np.int64)
+            return SparseLineGraph(new_h, _coo=(empty, empty, empty))
+        s2 = old_to_new[src] if src.size else src
+        d2 = old_to_new[dst] if dst.size else dst
+        touched_mask = np.zeros(new_h.m, bool)
+        touched_mask[np.asarray(touched, np.int64)] = True
+        keep = (s2 >= 0) & (d2 >= 0)
+        keep &= ~(touched_mask[np.clip(s2, 0, None)]
+                  | touched_mask[np.clip(d2, 0, None)])
+        srcs, dsts, ods = [s2[keep]], [d2[keep]], [od[keep]]
+        for t in np.asarray(touched, np.int64):
+            t = int(t)
+            nb, w = new_h.neighbors_od(t)
+            # pair (t, x): untouched x is only generated from t's side;
+            # touched x is generated from both — keep the t < x copy
+            sel = (~touched_mask[nb]) | (nb > t)
+            srcs.append(np.full(int(sel.sum()), t, np.int64))
+            dsts.append(nb[sel])
+            ods.append(w[sel])
+        return SparseLineGraph(new_h, _coo=(np.concatenate(srcs),
+                                            np.concatenate(dsts),
+                                            np.concatenate(ods)))
 
     def seed(self, vertices) -> jax.Array:
         """[Q, m] boolean: hyperedges incident to each query vertex."""

@@ -36,7 +36,45 @@ import numpy as np
 
 from .hypergraph import Hypergraph
 
-__all__ = ["HLIndex", "build_basic", "build_fast", "pad_label_rows"]
+__all__ = ["HLIndex", "build_basic", "build_fast", "pad_label_rows",
+           "splice_rank"]
+
+
+def splice_rank(old_rank: np.ndarray, old_to_new: np.ndarray,
+                sub_edges: np.ndarray, sub_rank: np.ndarray,
+                m_new: int) -> np.ndarray:
+    """Compose a global importance rank for a graph after scoped
+    maintenance: surviving hyperedges outside the rebuilt scope keep
+    their old rank *values* unchanged, hyperedges inside the scope get
+    fresh keys above every old value, ordered by sub-index importance.
+
+    Keeping old values (rather than recompacting to ``0..m_new-1``)
+    means the untouched vertices' ``labels_rank`` arrays stay valid
+    byte-for-byte and are reused by the splice without a regather — rank
+    is an opaque sort key everywhere it is consumed (merge-joins, padded
+    snapshots, ``perm = argsort(rank)``), never a dense array index, so
+    gaps are harmless.  Keys stay far below the int32 padding sentinel:
+    each update raises the maximum by at most the scope size, and
+    ``apply_updates`` falls back to a dense rebuild before ``2^30``.
+
+    ``sub_edges`` [m_sub] maps local sub-index hyperedge ids to new
+    global ids; ``sub_rank`` [m_sub] is the sub-index's own rank array.
+    Requires the scope to be a union of whole line-graph components —
+    then no label list ever mixes hubs from the two groups, so how the
+    groups interleave cannot affect any merge-join (rank is only ever
+    compared between hubs reachable from a common vertex), and any total
+    order per group yields a correct index (order only affects
+    minimality).
+    """
+    new_rank = np.full(m_new, -1, np.int64)
+    old_ids = np.nonzero(old_to_new >= 0)[0]
+    new_rank[old_to_new[old_ids]] = old_rank[old_ids]
+    base = int(old_rank.max()) + 1 if old_rank.size else 0
+    new_rank[sub_edges] = base + sub_rank
+    if (new_rank < 0).any():
+        raise ValueError("splice_rank: some hyperedge is neither a "
+                         "surviving edge nor in the scope")
+    return new_rank
 
 
 def pad_label_rows(row_ranks, row_svals, pad_to=None):

@@ -21,6 +21,8 @@ __all__ = [
     "Hypergraph",
     "from_edge_lists",
     "compact",
+    "induced_subhypergraph",
+    "apply_edge_edits",
     "random_hypergraph",
     "planted_chain_hypergraph",
     "colocation_hypergraph",
@@ -196,6 +198,113 @@ def compact(h: Hypergraph) -> Tuple[Hypergraph, np.ndarray]:
         return h, rep
     g = from_edge_lists([h.edge(e) for e in keep], n=h.n)
     return g, rep
+
+
+def induced_subhypergraph(h: Hypergraph, edge_ids: Sequence[int]
+                          ) -> Tuple[Hypergraph, np.ndarray]:
+    """Sub-hypergraph induced by ``edge_ids`` with compacted vertex ids.
+
+    Local hyperedge ``i`` is global ``edge_ids[i]`` (callers should pass
+    sorted ids so local order mirrors global order); local vertex ``j``
+    is global ``verts[j]``.  Returns ``(sub, verts)``.
+
+    When ``edge_ids`` is a union of whole line-graph components, every
+    hyperedge incident to an extracted vertex is itself extracted, so
+    vertex degrees — and therefore the importance order — inside the
+    sub-hypergraph coincide with the global ones restricted to it.  This
+    is the extraction primitive behind scoped index maintenance
+    (``repro.core.maintenance``).
+    """
+    ids = np.asarray(list(edge_ids), np.int64)
+    if ids.size == 0:
+        return from_edge_lists([], n=0), np.empty(0, np.int64)
+    sizes = h.e_ptr[ids + 1] - h.e_ptr[ids]
+    flat = h.e_idx[np.concatenate([np.arange(h.e_ptr[e], h.e_ptr[e + 1])
+                                   for e in ids])]
+    verts, local = np.unique(flat, return_inverse=True)
+    e_ptr = np.zeros(ids.size + 1, np.int64)
+    np.cumsum(sizes, out=e_ptr[1:])
+    edges = [local[e_ptr[i]:e_ptr[i + 1]] for i in range(ids.size)]
+    return from_edge_lists(edges, n=int(verts.size)), verts
+
+
+def apply_edge_edits(h: Hypergraph, inserts: Sequence[Iterable[int]] = (),
+                     deletes: Sequence[int] = ()
+                     ) -> Tuple[Hypergraph, np.ndarray, np.ndarray]:
+    """Apply hyperedge deletions then insertions; the pure graph edit
+    shared by index maintenance and every engine's ``update`` path.
+
+    Surviving hyperedges keep their relative order (ids compacted),
+    inserted hyperedges are appended in argument order.  Vertex ids are
+    never renumbered; inserting vertices beyond ``h.n`` grows ``n``.
+
+    Returns ``(new_h, old_to_new, touched)``:
+      * ``old_to_new`` [m_old] int64 — new id of each old hyperedge,
+        -1 for deleted ones;
+      * ``touched`` — sorted new ids of hyperedges whose line-graph
+        neighborhood may have changed: the inserted hyperedges, their
+        neighbors, and the surviving neighbors of deleted hyperedges.
+        (Adjacency caches only need refreshing on this 1-hop set; index
+        maintenance expands it to whole components.)
+
+    Cost is O(nnz) vectorized: surviving hyperedges are already clean
+    (sorted, deduplicated), so the edited CSR is assembled by masked
+    copies — no per-hyperedge re-cleaning.
+    """
+    del_set = {int(d) for d in deletes}
+    for d in del_set:
+        if not 0 <= d < h.m:
+            raise IndexError(f"delete of hyperedge {d} out of range "
+                             f"[0, {h.m})")
+    cleaned_inserts: List[np.ndarray] = []
+    for ed in inserts:
+        arr = np.unique(np.asarray(list(ed), dtype=np.int64))
+        if arr.size == 0:
+            continue                       # empty hyperedges never exist
+        if arr.min() < 0:
+            raise IndexError(f"insert with negative vertex id {arr.min()}")
+        cleaned_inserts.append(arr)
+
+    keep_mask = np.ones(h.m, bool)
+    keep_mask[list(del_set)] = False
+    old_to_new = np.where(keep_mask, np.cumsum(keep_mask) - 1, -1)
+    sizes = h.edge_sizes
+    kept_sizes = sizes[keep_mask]
+    kept_idx = h.e_idx[np.repeat(keep_mask, sizes)]
+    first_insert_id = int(kept_sizes.size)
+
+    ins_sizes = np.array([a.size for a in cleaned_inserts], np.int64)
+    all_sizes = np.concatenate([kept_sizes, ins_sizes])
+    m_new = int(all_sizes.size)
+    e_ptr = np.zeros(m_new + 1, np.int64)
+    np.cumsum(all_sizes, out=e_ptr[1:])
+    e_idx = np.concatenate([kept_idx] + cleaned_inserts) \
+        if m_new else np.empty(0, np.int64)
+    n_new = h.n
+    if cleaned_inserts:
+        n_new = max(n_new, int(max(a.max() for a in cleaned_inserts)) + 1)
+    # invert to vertex -> edges (same construction as from_edge_lists)
+    order = np.argsort(e_idx, kind="stable")
+    v_sorted = e_idx[order]
+    eid = np.repeat(np.arange(m_new, dtype=np.int64), all_sizes)[order]
+    v_ptr = np.zeros(n_new + 1, np.int64)
+    np.add.at(v_ptr, v_sorted + 1, 1)
+    np.cumsum(v_ptr, out=v_ptr)
+    new_h = Hypergraph(n=n_new, m=m_new, e_ptr=e_ptr, e_idx=e_idx,
+                       v_ptr=v_ptr, v_idx=eid)
+
+    touched = set(range(first_insert_id, new_h.m))
+    for t in list(touched):
+        nb, _ = new_h.neighbors_od(t)
+        touched.update(int(e) for e in nb)
+    for d in del_set:
+        nb, _ = h.neighbors_od(d)
+        for e in nb:
+            e_new = int(old_to_new[int(e)])
+            if e_new >= 0:
+                touched.add(e_new)
+    return new_h, old_to_new, np.fromiter(sorted(touched), np.int64,
+                                          len(touched))
 
 
 # ---------------------------------------------------------------------------

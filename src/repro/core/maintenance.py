@@ -1,40 +1,54 @@
 """HL-index maintenance under hyperedge updates (paper §V-D).
 
 The paper sketches insert/delete maintenance but defers the algorithm;
-we implement a **component-scoped label splice**: labels never cross
-connected components of the line graph (a walk cannot leave a component),
-so an insertion/deletion only invalidates labels whose *hub* lies in the
-touched component(s).  ``_rebuild_scoped`` keeps every surviving label
-(hub outside the affected set) from the old index and takes fresh labels
-only for affected hubs.
+we implement **component-scoped maintenance**: labels never cross
+connected components of the line graph (a walk cannot leave a
+component), so an insertion/deletion only invalidates labels whose hub
+lies in the touched component(s).  Both the label *content* and the
+label *construction* are scoped:
 
-Honesty note on cost: the *label content* is scoped, but the
-*construction* is not — ``_rebuild_scoped`` currently calls
-``build_fast`` on the **full** new graph and then discards the labels it
-splices over.  Maintenance is therefore exactly equivalent to a full
-rebuild in answers (asserted in tests) and in asymptotic build time; the
-win is limited to preserving the untouched components' label arrays
-(and their minimization state) byte-for-byte.  Running construction
-restricted to the affected sub-line-graph — the actual speed-up — needs
-subgraph extraction plus hub-rank remapping and is still open (see
-ROADMAP.md).
+1. ``apply_edge_edits`` (hypergraph.py) applies the graph edit and
+   reports the 1-hop touched hyperedges; ``component_of`` expands them
+   to the affected line-graph component(s) of the new graph.
+2. ``induced_subhypergraph`` extracts exactly those components and the
+   construction algorithm (``build_fast`` by default) runs on the
+   sub-hypergraph alone — the full graph is never re-traversed.
+3. ``splice_rank`` (hlindex.py) composes a global importance rank —
+   surviving out-of-scope hyperedges keep their old relative order,
+   in-scope hyperedges follow in sub-index order — and the splice maps
+   the sub-index's labels back into the global id space.  Vertices
+   outside the scope keep their label arrays (and any minimization
+   state) byte-for-byte; vertices inside get the fresh sub-labels.
 
-Limitation (recorded): hyperedge importance is recomputed globally, so an
-update that changes vertex degrees can reorder *other* components'
-hyperedges; we keep the original order for untouched components (any
-total order yields a correct index — order only affects minimality).
+Why the splice is exact: the scope is a union of whole components of
+the *new* line graph.  Every fragment of a deleted hyperedge's old
+component contains one of its old neighbors (take the last hyperedge
+before the deleted one on any old path into the fragment), so seeding
+the BFS with those neighbors covers all fragments; an inserted
+hyperedge seeds its own merged component.  A vertex is incident either
+only to in-scope or only to out-of-scope hyperedges (hyperedges sharing
+a vertex are line-graph adjacent), so each label list is rebuilt whole
+or kept whole — never mixed — and cross-group rank order is
+unobservable by any query.
+
+Limitation (recorded): hyperedge importance is recomputed only inside
+the scope, so an update that changes vertex degrees can in principle
+reorder *other* components' hyperedges; we keep the original order for
+untouched components (any total order yields a correct index — order
+only affects minimality).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import Callable, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .hypergraph import Hypergraph, from_edge_lists
-from .hlindex import HLIndex, build_fast
-from .baselines import line_graph_edges, _DSU
+from .hypergraph import (Hypergraph, apply_edge_edits,
+                         induced_subhypergraph)
+from .hlindex import HLIndex, build_fast, splice_rank
 
-__all__ = ["insert_hyperedge", "delete_hyperedge", "component_of"]
+__all__ = ["insert_hyperedge", "delete_hyperedge", "apply_updates",
+           "component_of"]
 
 
 def component_of(h: Hypergraph, seeds: Sequence[int]) -> Set[int]:
@@ -52,79 +66,138 @@ def component_of(h: Hypergraph, seeds: Sequence[int]) -> Set[int]:
     return seen
 
 
-def _rebuild_scoped(new_h: Hypergraph, old_idx: Optional[HLIndex],
-                    affected: Set[int], edge_map: dict) -> HLIndex:
-    """Rebuild the index for ``affected`` hyperedges of ``new_h``; splice
-    surviving labels (hub outside ``affected``) from ``old_idx`` via
-    ``edge_map`` (old edge id -> new edge id, -1 = removed)."""
-    sub_idx = build_fast(new_h)     # correct; scoped pruning below
-    # Fast path: build_fast on the full graph already yields the right
-    # answer; the *scoped* variant reuses old labels for untouched hubs.
-    if old_idx is None:
-        return sub_idx
-    keep_hubs = {edge_map[e]: e for e in range(old_idx.h.m)
-                 if edge_map.get(e, -1) >= 0 and edge_map[e] not in affected}
-    le, lr, ls = [], [], []
-    rank = sub_idx.rank
-    for u in range(new_h.n):
-        pairs = {}
-        # surviving labels from the old index
-        if u < old_idx.h.n:
-            for e_old, s in zip(old_idx.labels_edge[u], old_idx.labels_s[u]):
-                e_new = edge_map.get(int(e_old), -1)
-                if e_new in keep_hubs:
-                    pairs[e_new] = int(s)
-        # fresh labels for affected hubs
-        for e, s in zip(sub_idx.labels_edge[u], sub_idx.labels_s[u]):
-            if int(e) in affected:
-                pairs[int(e)] = int(s)
-        if pairs:
-            e_arr = np.fromiter(pairs.keys(), np.int64, len(pairs))
-            s_arr = np.fromiter(pairs.values(), np.int64, len(pairs))
-            order = np.argsort(rank[e_arr], kind="stable")
-            e_arr, s_arr = e_arr[order], s_arr[order]
-        else:
-            e_arr = np.empty(0, np.int64)
-            s_arr = np.empty(0, np.int64)
-        le.append(e_arr)
-        lr.append(rank[e_arr] if e_arr.size else np.empty(0, np.int64))
-        ls.append(s_arr)
-    dual_u: List[List[int]] = [[] for _ in range(new_h.m)]
-    dual_s: List[List[int]] = [[] for _ in range(new_h.m)]
-    for u in range(new_h.n):
-        for e, s in zip(le[u], ls[u]):
-            dual_u[int(e)].append(u)
-            dual_s[int(e)].append(int(s))
-    du = [np.array(a, np.int64) for a in dual_u]
-    ds = [np.array(a, np.int64) for a in dual_s]
-    return HLIndex(h=new_h, rank=rank, perm=sub_idx.perm, labels_edge=le,
+def _splice(new_h: Hypergraph, old_idx: HLIndex, old_to_new: np.ndarray,
+            scope: np.ndarray, refresh_vertices: np.ndarray,
+            builder: Callable[[Hypergraph], HLIndex],
+            minimizer: Optional[Callable[[HLIndex], HLIndex]],
+            identity_map: bool) -> HLIndex:
+    """Build the index for the ``scope`` hyperedges of ``new_h`` only and
+    splice it over the surviving labels of ``old_idx``.  With
+    ``identity_map`` (no deletions: hyperedge ids unshifted) untouched
+    vertices share all three label arrays with the old index; rank
+    values of out-of-scope hyperedges are preserved by ``splice_rank``,
+    so ``labels_rank`` is shared in both cases."""
+    if scope.size:
+        sub_h, sub_verts = induced_subhypergraph(new_h, scope)
+        sub_idx = builder(sub_h)
+        if minimizer is not None:
+            sub_idx = minimizer(sub_idx)
+        sub_rank = sub_idx.rank
+    else:
+        sub_h, sub_verts = None, np.empty(0, np.int64)
+        sub_idx, sub_rank = None, np.empty(0, np.int64)
+
+    rank = splice_rank(old_idx.rank, old_to_new, scope, sub_rank, new_h.m)
+    perm = np.argsort(rank)
+
+    refresh = np.zeros(new_h.n, bool)
+    refresh[sub_verts] = True
+    refresh[refresh_vertices[refresh_vertices < new_h.n]] = True
+    local_of = np.full(new_h.n, -1, np.int64)
+    local_of[sub_verts] = np.arange(sub_verts.size)
+
+    # out-of-scope vertices share all label arrays with the old index
+    # (never mutated; splice_rank preserved their hubs' rank values) —
+    # only hyperedge ids need remapping, and only when deletions shifted
+    # ids.  Start from whole-list copies and patch the refreshed rows.
+    empty = np.empty(0, np.int64)
+    pad = [empty] * (new_h.n - old_idx.h.n)
+    le: List[np.ndarray] = list(old_idx.labels_edge) + pad
+    lr: List[np.ndarray] = list(old_idx.labels_rank) + pad
+    ls: List[np.ndarray] = list(old_idx.labels_s) + pad
+    if not identity_map:
+        for u in range(old_idx.h.n):
+            if le[u].size and not refresh[u]:
+                le[u] = old_to_new[le[u]]
+    for u in np.nonzero(refresh)[0]:
+        lu = int(local_of[u])
+        if lu >= 0:
+            e = scope[sub_idx.labels_edge[lu]]
+            le[u] = e
+            lr[u] = rank[e] if e.size else empty
+            ls[u] = sub_idx.labels_s[lu]
+        else:                           # lost its last hyperedge: no labels
+            le[u] = lr[u] = ls[u] = empty
+
+    # duals: vertex ids are never renumbered, so out-of-scope hyperedges
+    # keep their (vertex, s) arrays; in-scope ones come from the sub-index
+    if identity_map:
+        du: List[np.ndarray] = list(old_idx.dual_u) + [empty] * (
+            new_h.m - old_idx.h.m)
+        ds: List[np.ndarray] = list(old_idx.dual_s) + [empty] * (
+            new_h.m - old_idx.h.m)
+    else:
+        kept_old = np.nonzero(old_to_new >= 0)[0]
+        du = [old_idx.dual_u[int(e)] for e in kept_old]
+        ds = [old_idx.dual_s[int(e)] for e in kept_old]
+        du += [empty] * (new_h.m - len(du))
+        ds += [empty] * (new_h.m - len(ds))
+    for loc, e in enumerate(scope):
+        du[int(e)] = sub_verts[sub_idx.dual_u[loc]]
+        ds[int(e)] = sub_idx.dual_s[loc]
+
+    stats = dict(old_idx.stats)
+    if sub_idx is not None:
+        for key, val in sub_idx.stats.items():
+            stats[f"sub_{key}"] = val
+    stats["maintenance_scope"] = int(scope.size)
+    stats["maintenance_subgraph_m"] = int(sub_h.m) if sub_h is not None else 0
+    return HLIndex(h=new_h, rank=rank, perm=perm, labels_edge=le,
                    labels_rank=lr, labels_s=ls, dual_u=du, dual_s=ds,
-                   stats=dict(sub_idx.stats, maintenance_scope=len(affected)))
+                   stats=stats)
+
+
+def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
+                  inserts: Sequence[Iterable[int]] = (),
+                  deletes: Sequence[int] = (), *,
+                  builder: Callable[[Hypergraph], HLIndex] = build_fast,
+                  minimizer: Optional[Callable[[HLIndex], HLIndex]] = None
+                  ) -> Tuple[Hypergraph, HLIndex]:
+    """Apply a batch of hyperedge inserts/deletes and maintain the index.
+
+    Returns ``(new_h, new_idx)``.  Construction runs only on the
+    affected line-graph component(s) (``builder`` on the extracted
+    sub-hypergraph, ``minimizer`` applied to the sub-index if given);
+    everything else is spliced from ``idx``.  ``idx=None`` builds from
+    scratch.  Answers are exactly those of a full rebuild (asserted in
+    tests/test_maintenance.py and tests/test_property.py).
+    """
+    new_h, old_to_new, touched = apply_edge_edits(h, inserts, deletes)
+    if idx is None:
+        new_idx = builder(new_h)
+        if minimizer is not None:
+            new_idx = minimizer(new_idx)
+        return new_h, new_idx
+    affected = component_of(new_h, touched) if touched.size else set()
+    scope = np.fromiter(sorted(affected), np.int64, len(affected))
+    # vertices of deleted hyperedges may have lost their last hyperedge
+    # (degree 0 in new_h) without being incident to any in-scope edge —
+    # their stale labels must be dropped, so force-refresh them
+    refresh_extra = (np.unique(np.concatenate(
+        [h.edge(int(d)) for d in deletes])) if len(deletes)
+        else np.empty(0, np.int64))
+    rank_headroom = (int(idx.rank.max()) if idx.rank.size else 0) < 2 ** 30
+    if scope.size == new_h.m or not rank_headroom:
+        # everything affected (or the sparse rank key space ran out after
+        # ~2^30 cumulative scope edges): plain dense rebuild
+        new_idx = builder(new_h)
+        if minimizer is not None:
+            new_idx = minimizer(new_idx)
+        new_idx.stats["maintenance_scope"] = int(scope.size)
+        new_idx.stats["maintenance_subgraph_m"] = int(new_h.m)
+        return new_h, new_idx
+    return new_h, _splice(new_h, idx, old_to_new, scope, refresh_extra,
+                          builder, minimizer,
+                          identity_map=not len(deletes))
 
 
 def insert_hyperedge(h: Hypergraph, idx: HLIndex,
                      vertices: Sequence[int]) -> Tuple[Hypergraph, HLIndex]:
     """Insert a hyperedge; returns (new graph, maintained index)."""
-    n = max(int(max(vertices)) + 1, h.n)
-    edges = [h.edge(e) for e in range(h.m)] + [np.asarray(vertices)]
-    new_h = from_edge_lists(edges, n=n)
-    new_id = new_h.m - 1
-    affected = component_of(new_h, [new_id])
-    edge_map = {e: e for e in range(h.m)}
-    return new_h, _rebuild_scoped(new_h, idx, affected, edge_map)
+    return apply_updates(h, idx, inserts=[vertices])
 
 
 def delete_hyperedge(h: Hypergraph, idx: HLIndex, edge_id: int
                      ) -> Tuple[Hypergraph, HLIndex]:
     """Delete a hyperedge; rebuilds every fragment of its old component."""
-    nb, _ = h.neighbors_od(edge_id)
-    edges = [h.edge(e) for e in range(h.m) if e != edge_id]
-    new_h = from_edge_lists(edges, n=h.n)
-    edge_map = {}
-    j = 0
-    for e in range(h.m):
-        edge_map[e] = -1 if e == edge_id else j
-        j += e != edge_id
-    seeds = [edge_map[int(e)] for e in nb if edge_map[int(e)] >= 0]
-    affected = component_of(new_h, seeds) if seeds else set()
-    return new_h, _rebuild_scoped(new_h, idx, affected, edge_map)
+    return apply_updates(h, idx, deletes=[edge_id])

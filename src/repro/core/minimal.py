@@ -27,7 +27,6 @@ from typing import Dict, List, Set, Tuple
 import numpy as np
 
 from .hlindex import HLIndex
-from .hypergraph import Hypergraph
 
 __all__ = ["minimize", "exact_minimize"]
 
@@ -78,12 +77,13 @@ def minimize(idx: HLIndex) -> HLIndex:
         entries = D[root]
         if not entries:
             continue
-        # lines 3-6: inverted set I over potential supporting hubs
-        I: Dict[int, List[Tuple[int, int]]] = {}
+        # lines 3-6: the paper's inverted set I over potential supporting
+        # hubs (named `inv` here; `I` is an ambiguous identifier)
+        inv: Dict[int, List[Tuple[int, int]]] = {}
         for v, s_v in entries:
             for e2, s2 in L[v].items():
                 if e2 != root and s2 >= s_v:
-                    I.setdefault(e2, []).append((v, s_v))
+                    inv.setdefault(e2, []).append((v, s_v))
         alive: Dict[int, int] = dict(entries)        # current V(D(root))
         NR: Set[int] = set()                         # unprocessed, pre-marked
         processed: Set[int] = set()
@@ -99,7 +99,7 @@ def minimize(idx: HLIndex) -> HLIndex:
             for e2, s2u in L[u].items():
                 if e2 == root:
                     continue
-                for v, s_v in I.get(e2, ()):
+                for v, s_v in inv.get(e2, ()):
                     if v not in alive or s2u < s_v:
                         continue
                     S.add(v)

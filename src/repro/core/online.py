@@ -28,7 +28,12 @@ class NeighborCache:
     straightforward time/space trade.
     """
 
-    def __init__(self, h: Hypergraph):
+    def __init__(self, h: Hypergraph,
+                 _lists: Optional[Tuple[List[np.ndarray],
+                                        List[np.ndarray]]] = None):
+        if _lists is not None:
+            self.nbrs, self.ods = _lists
+            return
         self.nbrs: List[np.ndarray] = []
         self.ods: List[np.ndarray] = []
         for e in range(h.m):
@@ -38,6 +43,33 @@ class NeighborCache:
 
     def __call__(self, e: int) -> Tuple[np.ndarray, np.ndarray]:
         return self.nbrs[e], self.ods[e]
+
+    def updated(self, new_h: Hypergraph, old_to_new: np.ndarray,
+                touched) -> "NeighborCache":
+        """Cache for the edited graph: only hyperedges in ``touched`` (new
+        ids — see ``apply_edge_edits``) recompute their neighbor lists;
+        every other surviving hyperedge keeps its lists with ids remapped.
+        An untouched hyperedge never neighbors a deleted one (neighbors of
+        deleted hyperedges are by definition touched), so the remap is
+        total on kept lists."""
+        touched_set = {int(t) for t in touched}
+        old_of = np.full(new_h.m, -1, np.int64)
+        kept = np.nonzero(old_to_new >= 0)[0]
+        old_of[old_to_new[kept]] = kept
+        nbrs: List[np.ndarray] = []
+        ods: List[np.ndarray] = []
+        for e in range(new_h.m):
+            e_old = int(old_of[e])
+            if e in touched_set or e_old < 0:
+                nb, od = new_h.neighbors_od(e)
+            else:
+                # old_to_new is strictly increasing on survivors, so the
+                # remapped list keeps the sorted-id invariant as-is
+                nb = old_to_new[self.nbrs[e_old]]
+                od = self.ods[e_old]
+            nbrs.append(nb)
+            ods.append(od)
+        return NeighborCache(new_h, _lists=(nbrs, ods))
 
     def nbytes(self) -> int:
         return sum(a.nbytes + b.nbytes for a, b in zip(self.nbrs, self.ods))

@@ -105,23 +105,34 @@ class DeviceSnapshot:
     ``to_mesh`` re-lands the same tensors sharded over a device mesh via
     ``NamedSharding``, so one snapshot can outlive (and serve) any number
     of query batches on a multi-device topology.
+
+    ``version`` records the engine version the snapshot was derived from
+    (see ``ReachabilityEngine.update``): after an update, the engine's
+    ``snapshot()`` re-derives a fresh snapshot with the bumped version,
+    while previously handed-out snapshots keep their old version — a
+    snapshot with ``snap.version != engine.version`` is stale.
+    ``to_mesh`` propagates the version, so resharded copies stay
+    comparable.
     """
 
     ranks: jnp.ndarray
     svals: jnp.ndarray
     lengths: jnp.ndarray
     backend: str = "hl-index"
+    version: int = 0
 
     @classmethod
-    def from_padded(cls, ranks, svals, lengths, backend: str) -> "DeviceSnapshot":
+    def from_padded(cls, ranks, svals, lengths, backend: str,
+                    version: int = 0) -> "DeviceSnapshot":
         return cls(ranks=jnp.asarray(ranks), svals=jnp.asarray(svals),
-                   lengths=jnp.asarray(lengths), backend=backend)
+                   lengths=jnp.asarray(lengths), backend=backend,
+                   version=version)
 
     @classmethod
-    def from_hlindex(cls, idx: HLIndex,
-                     backend: str = "hl-index") -> "DeviceSnapshot":
+    def from_hlindex(cls, idx: HLIndex, backend: str = "hl-index",
+                     version: int = 0) -> "DeviceSnapshot":
         ranks, svals, lengths = idx.as_padded()
-        return cls.from_padded(ranks, svals, lengths, backend)
+        return cls.from_padded(ranks, svals, lengths, backend, version)
 
     def to_mesh(self, mesh, axes: Optional[Tuple[str, str]] = None
                 ) -> "DeviceSnapshot":
@@ -160,7 +171,7 @@ class DeviceSnapshot:
             ranks=jax.device_put(ranks, spec2d),
             svals=jax.device_put(svals, spec2d),
             lengths=jax.device_put(lengths, NamedSharding(mesh, P(row_ax))),
-            backend=self.backend)
+            backend=self.backend, version=self.version)
 
     @property
     def lmax(self) -> int:

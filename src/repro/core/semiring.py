@@ -22,7 +22,7 @@ huge hypergraphs is the 2-D block-sharded version in ``distributed.py``.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -166,6 +166,8 @@ def threshold_closure_mr(w: jax.Array, thresholds: Optional[np.ndarray] = None,
 
 def mr_matrix(h: Hypergraph, *, method: str = "maxmin") -> np.ndarray:
     """Hyperedge-level MR matrix W* for a whole hypergraph."""
+    if h.m == 0:                # no hyperedges: nothing is reachable
+        return np.zeros((0, 0), np.int32)
     w = jnp.asarray(h.line_graph(np.int32))
     if method == "maxmin":
         return np.asarray(maxmin_closure(w))

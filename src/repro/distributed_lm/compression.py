@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.train.optimizer import quantize_blockwise, dequantize_blockwise
+from repro.train.optimizer import quantize_blockwise
 
 Params = Any
 

@@ -36,7 +36,7 @@ def label_join_pallas(ru: jax.Array, su: jax.Array, rv: jax.Array,
                       interpret: bool = False) -> jax.Array:
     """ru/rv [Q, L] int32 ascending ranks (INT32_MAX pad — padding never
     matches since real ranks < m), su/sv [Q, L] int32 (0 pad)."""
-    q, l = ru.shape
+    q, lmax = ru.shape
     pad = (-q) % bq
     if pad:
         ru, su, rv, sv = (jnp.pad(x, ((0, pad), (0, 0))) for x in (ru, su, rv, sv))
@@ -48,7 +48,7 @@ def label_join_pallas(ru: jax.Array, su: jax.Array, rv: jax.Array,
     out = pl.pallas_call(
         _kernel,
         grid=(qg,),
-        in_specs=[pl.BlockSpec((bq, l), lambda i: (i, 0)) for _ in range(4)],
+        in_specs=[pl.BlockSpec((bq, lmax), lambda i: (i, 0)) for _ in range(4)],
         out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((ru.shape[0],), su.dtype),
         interpret=interpret,

@@ -7,7 +7,6 @@ bypass Pallas entirely (pure-jnp fallbacks).
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Optional
 

@@ -31,8 +31,7 @@ from repro.compat import shard_map
 
 from repro.launch.mesh import make_production_mesh
 from repro.launch.hlo_analysis import loop_aware_collectives
-from repro.core.distributed import (sharded_maxmin_round,
-                                    collective_bytes_of)
+from repro.core.distributed import sharded_maxmin_round
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

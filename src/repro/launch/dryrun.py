@@ -29,10 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.configs import ALIASES, get_config
 from repro.models import build_model
 from repro.launch.mesh import make_production_mesh
-from repro.launch.shapes import SHAPES, ShapeCell, cell_applicable
+from repro.launch.shapes import SHAPES, cell_applicable
 from repro.distributed_lm.sharding import (input_structs, shard_params,
                                            cache_structs, named, batch_axes)
 from repro.train.optimizer import AdamConfig, adam_init, opt_state_specs

@@ -8,7 +8,7 @@ see DESIGN.md §4)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.models.common import ArchConfig
 

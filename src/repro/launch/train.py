@@ -8,13 +8,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import build_model

@@ -1,7 +1,7 @@
 """Serving cache utilities: prefill + decode drivers."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

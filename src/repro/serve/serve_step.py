@@ -10,7 +10,6 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.common import ArchConfig
 

@@ -11,7 +11,6 @@ s-reachability equivalence of the paper (Sec. II).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np

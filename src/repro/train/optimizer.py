@@ -12,8 +12,7 @@ Both are pure-pytree (no optax dependency) and compose with:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,7 +151,7 @@ def lr_schedule(cfg: AdamConfig, step: jax.Array) -> jax.Array:
 
 def global_norm(tree: Params) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
 
 
 def clip_by_global_norm(tree: Params, max_norm: float

@@ -9,14 +9,13 @@ Grad accumulation is in f32 regardless of compute dtype.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.common import ArchConfig
-from .optimizer import AdamConfig, adam_init, adam_update
+from .optimizer import AdamConfig, adam_update
 
 Params = Any
 

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Two checks, so documentation cannot silently drift from the code:
+Three checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -9,6 +9,11 @@ Two checks, so documentation cannot silently drift from the code:
    (`repro.api.available_backends()`) appears as a row in the backend
    table of docs/ARCHITECTURE.md — registering a backend without
    documenting it fails the build.
+3. The update-capability table in docs/ARCHITECTURE.md (rows of the
+   form ``| `name` | scoped | ... |``) covers every registered backend
+   and agrees with the live `repro.api.update_capabilities()` —
+   misdeclaring how a backend absorbs hyperedge updates fails the
+   build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -24,6 +29,9 @@ sys.path.insert(0, str(ROOT / "src"))
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FENCE = re.compile(r"```.*?```", re.S)
 _TABLE_ROW = re.compile(r"^\|\s*`([^`]+)`", re.M)
+_CAPABILITY_ROW = re.compile(
+    r"^\|\s*`([^`]+)`\s*\|\s*(scoped|incremental|rebuild|unsupported)\s*\|",
+    re.M)
 
 
 def doc_files():
@@ -53,21 +61,49 @@ def check_backend_table():
     arch = ROOT / "docs" / "ARCHITECTURE.md"
     if not arch.is_file():
         return ["docs/ARCHITECTURE.md is missing"]
-    documented = set(_TABLE_ROW.findall(arch.read_text()))
+    # catalogue rows only: a row in the update-capability table (second
+    # column is a capability word) must not satisfy this check, or
+    # deleting a backend's catalogue row would go unnoticed
+    documented = {name for line in arch.read_text().splitlines()
+                  if (match := _TABLE_ROW.match(line)) is not None
+                  and not _CAPABILITY_ROW.match(line)
+                  for name in [match.group(1)]}
     return [f"docs/ARCHITECTURE.md backend table is missing registered "
             f"backend `{name}`"
             for name in available_backends() if name not in documented]
 
 
+def check_update_capability_table():
+    from repro.api import update_capabilities
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    documented = dict(_CAPABILITY_ROW.findall(arch.read_text()))
+    problems = []
+    for name, cap in update_capabilities().items():
+        if name not in documented:
+            problems.append(
+                f"docs/ARCHITECTURE.md update-capability table is missing "
+                f"registered backend `{name}` (declared: {cap})")
+        elif documented[name] != cap:
+            problems.append(
+                f"docs/ARCHITECTURE.md declares `{name}` updates as "
+                f"'{documented[name]}' but the registry says '{cap}'")
+    return problems
+
+
 def main() -> int:
-    problems = check_links() + check_backend_table()
+    problems = (check_links() + check_backend_table()
+                + check_update_capability_table())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
         return 1
-    from repro.api import available_backends
+    from repro.api import available_backends, update_capabilities
     print(f"docs OK: links resolve in {len(doc_files())} files; "
-          f"backend table covers {available_backends()}")
+          f"backend table covers {available_backends()}; update "
+          f"capabilities match {update_capabilities()}")
     return 0
 
 
