@@ -50,7 +50,7 @@ def bench_components(n_components: int, chain_len: int, reps: int,
         ins = [int(anchor[0]), int(anchor[1]), h.n + r]
 
         t0 = time.perf_counter()
-        h_ins, idx_ins = apply_updates(h, idx, inserts=[ins])
+        h_ins, idx_ins, _ = apply_updates(h, idx, inserts=[ins])
         t1 = time.perf_counter()
         full_ins = build_fast(h_ins)
         t2 = time.perf_counter()
@@ -65,7 +65,8 @@ def bench_components(n_components: int, chain_len: int, reps: int,
             assert a == b, (n_components, r, int(u), int(v), a, b)
 
         t0 = time.perf_counter()
-        h_del, idx_del = apply_updates(h_ins, idx_ins, deletes=[h_ins.m - 1])
+        h_del, idx_del, _ = apply_updates(h_ins, idx_ins,
+                                          deletes=[h_ins.m - 1])
         t1 = time.perf_counter()
         full_del = build_fast(h_del)
         t2 = time.perf_counter()

@@ -30,6 +30,21 @@ scoped construction on the affected line-graph component(s)
 call (``closure``/``sharded``), or ``UpdateUnsupported`` (the static
 baselines).
 
+Serving heavy request traffic goes through the request-based service
+instead of hand-assembled batches (``repro.serve.reach_service``):
+
+    svc = serve(h, batch_hint=10_000)            # engine + admission loop
+    f = svc.mr(4, 8)                             # Future[int]
+    g = svc.submit(SReachRequest(4, 8, s=2))     # Future[bool], mixed s ok
+    f.result(); g.result()
+    svc.update(inserts=[[3, 7, 9]])              # snapshot swapped between
+    svc.close()                                  #   micro-batches
+
+The service coalesces pending requests into fused padded device batches
+(power-of-two buckets bound XLA recompiles) and reuses one
+version-keyed resident snapshot across batches — after a scoped update
+only the dirty label rows are re-derived.
+
 Multi-device serving goes through the same two calls — build a mesh and
 pass it:
 
@@ -51,18 +66,76 @@ from repro.compat import make_mesh
 from repro.core.engine import (ReachabilityEngine, DeviceSnapshot,
                                SnapshotUnsupported, UpdateUnsupported,
                                available_backends, update_capabilities,
-                               plan_backend, register_backend)
+                               plan_backend, register_backend,
+                               validate_batch)
 from repro.core.engine import build as build_engine
 from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
                                    random_hypergraph,
                                    planted_chain_hypergraph,
                                    colocation_hypergraph, paper_figure1)
+from repro.serve.reach_service import (MRRequest, ReachabilityService,
+                                       SReachRequest)
 
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
     "UpdateUnsupported", "build_engine", "available_backends",
     "update_capabilities", "plan_backend", "register_backend",
-    "make_mesh",
+    "validate_batch", "make_mesh",
+    "ReachabilityService", "MRRequest", "SReachRequest", "serve",
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
 ]
+
+
+def serve(h_or_engine, backend: str = "auto", *, mesh=None,
+          start: bool = True, batch_hint=None,
+          **opts) -> ReachabilityService:
+    """One-call serving: build an engine (unless given one) and wrap it
+    in a ``ReachabilityService``.
+
+    Args:
+      h_or_engine: a ``Hypergraph`` to build an engine over, or an
+        already-built ``ReachabilityEngine`` to serve as-is.
+      backend / batch_hint / mesh / engine ``**opts``: forwarded to
+        ``build_engine`` when a hypergraph is passed.  ``mesh`` is also
+        handed to the service so the resident snapshot is kept
+        mesh-sharded.
+      start: start the background admission thread (``start=False`` =
+        synchronous mode; call ``svc.drain()``).
+
+    Service knobs (``max_batch``, ``min_bucket``, ``max_wait_ms``) ride
+    along in ``**opts`` and are routed to the service, everything else
+    to the engine build.  ``axes`` names the mesh (row, column) axes in
+    both layers and is forwarded to both: the ``sharded`` engine's
+    block-sharding and the service's ``to_mesh`` re-landing.
+    """
+    service_opts = {k: opts.pop(k) for k in
+                    ("max_batch", "min_bucket", "max_wait_ms")
+                    if k in opts}
+    axes = opts.pop("axes", None)
+    if axes is not None:
+        service_opts["axes"] = axes
+    if isinstance(h_or_engine, Hypergraph):
+        # resolve "auto" here so backend-specific options route correctly
+        # (axes must reach the sharded engine even when the planner — not
+        # the caller — picked it)
+        resolved = backend if backend != "auto" else plan_backend(
+            h_or_engine, batch_hint, mesh=mesh,
+            device_budget_bytes=opts.get("device_budget_bytes"))
+        if axes is not None and resolved == "sharded":
+            opts["axes"] = axes      # same axes in both layers
+        engine = build_engine(h_or_engine, resolved, batch_hint=batch_hint,
+                              mesh=mesh, **opts)
+    else:
+        rejected = sorted(opts)
+        if backend != "auto":
+            rejected.append(f"backend={backend!r}")
+        if batch_hint is not None:
+            rejected.append(f"batch_hint={batch_hint!r}")
+        if rejected:
+            raise ValueError(
+                f"engine options {rejected} make no sense with an "
+                f"already-built engine — they would be silently ignored")
+        engine = h_or_engine
+    return ReachabilityService(engine, mesh=mesh, start=start,
+                               **service_opts)

@@ -4,8 +4,8 @@ hypergraphs) plus its (max, min)-semiring TPU re-expression.
 Naming note: ``batched_mr`` is the HL-index label-join engine
 (query.py).  The sparse frontier-sweep engine exports
 ``frontier_batched_mr`` / ``frontier_batched_s_reach`` (frontier.py) —
-historically the frontier one shadowed the label-join one under the same
-name; ``batched_s_reach`` survives only as a deprecated alias.  New code
+historically the frontier one shadowed the label-join one under the
+same name; the deprecated compatibility aliases are gone.  New code
 should go through the unified facade in ``repro.api`` /
 ``repro.core.engine`` instead of either raw function.
 """
@@ -52,14 +52,3 @@ __all__ = [
 ]
 
 
-def __getattr__(name: str):
-    # deprecated alias: `batched_s_reach` always meant the frontier sweep
-    # (the label-join engine never had an s_reach batch entry point).
-    if name == "batched_s_reach":
-        import warnings
-        warnings.warn(
-            "repro.core.batched_s_reach is deprecated; use "
-            "frontier_batched_s_reach (or repro.api.build_engine)",
-            DeprecationWarning, stacklevel=2)
-        return frontier_batched_s_reach
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -43,7 +43,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
-from .engine import _EngineBase, register_backend
+from .engine import _EngineBase, register_backend, validate_batch
 from .query import DeviceSnapshot
 
 __all__ = [
@@ -364,14 +364,18 @@ class ShardedEngine(_EngineBase):
         return self.mr(u, v) >= int(s)
 
     def mr_batch(self, us, vs) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().mr(us, vs)).astype(np.int64)
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
-        if self._snap is None:
+        if not self._snapshot_current():
             self._snap = self._build_snapshot()
+            self.last_snapshot_refresh_rows = self.h.n
+            self._dirty_rows = np.empty(0, np.int64)
             # every query path serves off the snapshot from here on — free
             # the closure so the resident footprint is the snapshot alone
             # (the regime this backend exists for is memory-bound)

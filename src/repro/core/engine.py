@@ -52,6 +52,17 @@ in docs/ARCHITECTURE.md):
 Every successful update bumps ``engine.version`` and invalidates the
 cached ``DeviceSnapshot`` — snapshots carry the version they were
 derived from, so staleness is detectable even after ``to_mesh``.
+
+Snapshot *caching* rides on the same versioning: engines keep the stale
+snapshot as a patch basis and track the dirty label rows each update
+touched (``dirty_rows()``; fed by the scoped-maintenance
+``UpdateReport`` for the HL-index backends), so ``snapshot()`` after a
+scoped update re-derives only the changed rows via
+``DeviceSnapshot.patch_rows`` — byte-identical to a from-scratch
+derivation, asserted in tests.  ``last_snapshot_refresh_rows`` records
+how many rows the most recent ``snapshot()`` actually re-derived.  The
+request-based serving layer (``repro.serve.reach_service``) consumes
+exactly this contract to swap snapshots between micro-batches.
 """
 from __future__ import annotations
 
@@ -75,11 +86,46 @@ from .semiring import mr_matrix, vertex_mr_from_edge_mr
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
     "UpdateUnsupported", "register_backend", "available_backends",
-    "update_capabilities", "plan_backend", "build",
+    "update_capabilities", "plan_backend", "build", "validate_batch",
     "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
     "ThresholdEngine", "MSTOracleEngine", "ClosureEngine",
     "SINGLE_DEVICE_CLOSURE_BUDGET",
 ]
+
+
+def validate_batch(us, vs, n: int):
+    """Shared input validation for every backend's ``mr_batch`` /
+    ``s_reach_batch`` (and the serving layer's admission path): ``us`` /
+    ``vs`` must be equal-length 1-D integer sequences of in-range vertex
+    ids.  Returns them as int64 numpy arrays.  Before this helper,
+    malformed input failed differently per backend (silent wraparound,
+    shape broadcast errors deep inside jitted code, ...); now every
+    entry point raises the same clear error.
+    """
+    us = np.asarray(us)
+    vs = np.asarray(vs)
+    if us.ndim != 1 or vs.ndim != 1:
+        raise ValueError(
+            f"query batch must be 1-D sequences of vertex ids; got shapes "
+            f"us{us.shape} vs{vs.shape}")
+    if us.shape[0] != vs.shape[0]:
+        raise ValueError(
+            f"query batch length mismatch: len(us)={us.shape[0]} != "
+            f"len(vs)={vs.shape[0]}")
+    for name, a in (("us", us), ("vs", vs)):
+        if a.size and not np.issubdtype(a.dtype, np.integer):
+            raise ValueError(
+                f"query batch {name} must have an integer dtype; got "
+                f"{a.dtype}")
+    us = us.astype(np.int64)
+    vs = vs.astype(np.int64)
+    for name, a in (("us", us), ("vs", vs)):
+        if a.size and (int(a.min()) < 0 or int(a.max()) >= n):
+            bad = int(a.min()) if int(a.min()) < 0 else int(a.max())
+            raise IndexError(
+                f"query batch {name} contains vertex id {bad}, out of "
+                f"range [0, {n})")
+    return us, vs
 
 # Per-device byte budget for the dense closure working set (operand plus
 # the two gathered panels, f32).  When a multi-device mesh is passed and
@@ -154,6 +200,11 @@ class _EngineBase:
     def __init__(self, h: Hypergraph):
         self.h = h
         self.version = 0
+        # label rows changed since the cached snapshot was derived:
+        # empty = snapshot current / patchable as-is, None = all rows
+        # (unknown or whole-structure rebuild)
+        self._dirty_rows: Optional[np.ndarray] = np.empty(0, np.int64)
+        self.last_snapshot_refresh_rows = 0
 
     @classmethod
     def build(cls, h: Hypergraph, **opts) -> "ReachabilityEngine":
@@ -167,18 +218,54 @@ class _EngineBase:
             f"backend {self.name!r} does not maintain its structure under "
             f"hyperedge updates; build a fresh engine instead")
 
-    def _graph_changed(self, new_h: Hypergraph) -> None:
-        """Install the edited graph, bump ``version``, and drop any cached
-        snapshot so the next ``snapshot()`` re-derives a current one."""
+    def _graph_changed(self, new_h: Hypergraph, dirty_rows=None) -> None:
+        """Install the edited graph and bump ``version``.  ``dirty_rows``
+        names the label rows the update changed (accumulated across
+        updates): the cached snapshot becomes stale but is *kept* as the
+        patch basis for the next ``snapshot()``.  ``None`` means all
+        rows — the next derivation is full anyway, so the stale snapshot
+        is dropped immediately rather than held through the rebuild (the
+        rebuild backends are the memory-bound regime; holding an
+        unusable snapshot across ``update`` would raise peak memory for
+        nothing)."""
         self.h = new_h
         self.version += 1
-        if getattr(self, "_snap", None) is not None:
-            self._snap = None
+        if dirty_rows is None:
+            self._dirty_rows = None
+            if getattr(self, "_snap", None) is not None:
+                self._snap = None
+        elif self._dirty_rows is not None:
+            self._dirty_rows = np.union1d(
+                self._dirty_rows, np.asarray(dirty_rows, np.int64))
+
+    def dirty_rows(self) -> Optional[np.ndarray]:
+        """Vertex rows whose padded label content may differ between the
+        cached (stale) snapshot — ``snapshot_cache()`` — and the one the
+        next ``snapshot()`` call returns; ``None`` = all rows / unknown.
+        Resets to empty once ``snapshot()`` re-derives.  The serving
+        layer reads this *before* refreshing to patch mesh-resident
+        snapshot copies row-wise; the delta is only meaningful relative
+        to ``snapshot_cache()``, so consumers holding an older copy must
+        check identity against it first."""
+        return self._dirty_rows
+
+    def snapshot_cache(self) -> Optional[DeviceSnapshot]:
+        """The currently cached snapshot object (possibly stale), or
+        ``None``.  ``dirty_rows()`` is the row delta between exactly
+        this object and the next ``snapshot()`` result — consumers that
+        patch their own resident copies row-wise must confirm their copy
+        derives from this object before trusting the delta."""
+        return getattr(self, "_snap", None)
+
+    def _snapshot_current(self) -> bool:
+        snap = getattr(self, "_snap", None)
+        return snap is not None and snap.version == self.version
 
     def s_reach(self, u: int, v: int, s: int) -> bool:
         return self.mr(u, v) >= s
 
     def mr_batch(self, us, vs) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.array([self.mr(int(u), int(v)) for u, v in zip(us, vs)],
                         np.int64)
 
@@ -358,22 +445,56 @@ class HLIndexEngine(_EngineBase):
         return s_reach_query(self.idx, int(u), int(v), int(s))
 
     def mr_batch(self, us, vs) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().mr(us, vs))
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
-        if self._snap is None:
-            self._snap = DeviceSnapshot.from_hlindex(self.idx, self.name,
-                                                     version=self.version)
-        return self._snap
+        """Current padded device form.  After a scoped ``update`` the
+        stale snapshot is patched: only the rows the ``UpdateReport``
+        marked dirty are re-padded and scattered over the old tensors
+        (byte-identical to a from-scratch derivation, asserted in
+        tests/test_serving.py); a full-rebuild update re-derives whole.
+        """
+        if self._snapshot_current():
+            return self._snap
+        basis, dirty = self._snap, self._dirty_rows
+        if basis is None or dirty is None:
+            snap = DeviceSnapshot.from_hlindex(self.idx, self.name,
+                                               version=self.version)
+            self.last_snapshot_refresh_rows = self.h.n
+        else:
+            snap = self._patched_snapshot(basis, dirty)
+            self.last_snapshot_refresh_rows = int(dirty.size)
+        self._snap = snap
+        self._dirty_rows = np.empty(0, np.int64)
+        return snap
+
+    def _patched_snapshot(self, basis: DeviceSnapshot,
+                          dirty: np.ndarray) -> DeviceSnapshot:
+        idx, n = self.idx, self.h.n
+        lengths = np.zeros(n, np.int64)
+        basis_n = int(basis.ranks.shape[0])
+        lengths[:basis_n] = np.asarray(basis.lengths)
+        lengths[dirty] = [idx.labels_s[int(u)].size for u in dirty]
+        lmax = int(lengths.max()) if n else 0
+        row_ranks, row_svals, row_lengths = pad_label_rows(
+            [idx.labels_rank[int(u)] for u in dirty],
+            [idx.labels_s[int(u)] for u in dirty], pad_to=lmax)
+        return basis.patch_rows(dirty, row_ranks, row_svals, row_lengths,
+                                n=n, lmax=lmax, version=self.version,
+                                backend=self.name)
 
     def update(self, inserts=(), deletes=()) -> None:
-        new_h, self.idx = apply_updates(self.h, self.idx, inserts, deletes,
-                                        builder=self._builder,
-                                        minimizer=self._minimizer)
-        self._graph_changed(new_h)
+        new_h, self.idx, report = apply_updates(
+            self.h, self.idx, inserts, deletes,
+            builder=self._builder, minimizer=self._minimizer)
+        self._graph_changed(
+            new_h, dirty_rows=(None if report.full_rebuild
+                               else report.refreshed_vertices))
 
     def nbytes(self) -> int:
         return self.idx.nbytes()
@@ -462,9 +583,11 @@ class FrontierEngine(_EngineBase):
         return bool(self.s_reach_batch([int(u)], [int(v)], int(s))[0])
 
     def mr_batch(self, us, vs) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return frontier_batched_mr(self.g, us, vs, rounds=self.rounds)
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return frontier_batched_s_reach(self.g, us, vs, int(s),
                                         rounds=self.rounds)
 
@@ -493,13 +616,15 @@ class ETEEngine(_EngineBase):
         return self.ete.mr(int(u), int(v))
 
     def mr_batch(self, us, vs) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().mr(us, vs))
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
-        if self._snap is None:
+        if not self._snapshot_current():
             merged = [self.ete._merged(self.h.edges_of(u))
                       for u in range(self.h.n)]
             ranks, svals, lengths = pad_label_rows([r for r, _ in merged],
@@ -595,13 +720,15 @@ class ClosureEngine(_EngineBase):
     def mr_batch(self, us, vs) -> np.ndarray:
         # batches go through the fused device join — the reason the
         # planner picks this backend for batched small-graph workloads
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().mr(us, vs))
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
+        us, vs = validate_batch(us, vs, self.h.n)
         return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
-        if self._snap is None:
+        if not self._snapshot_current():
             h, m = self.h, self.h.m
             svals = np.zeros((h.n, m), np.int32)
             deg = np.diff(h.v_ptr)
@@ -616,6 +743,8 @@ class ClosureEngine(_EngineBase):
             self._snap = DeviceSnapshot.from_padded(np.ascontiguousarray(ranks),
                                                     svals, lengths, self.name,
                                                     version=self.version)
+            self.last_snapshot_refresh_rows = h.n
+            self._dirty_rows = np.empty(0, np.int64)
         return self._snap
 
     def nbytes(self) -> int:

@@ -13,9 +13,11 @@ degrees) and answers batched queries with data-parallel frontier sweeps:
     log₂|S| sweeps (the bisection idea from §Perf C applied to the sparse
     form).
 
-The old unprefixed names (``batched_s_reach`` / ``batched_mr``) collided
-with the label-join engine in query.py and survive only as deprecated
-module-level aliases.
+(The unprefixed names ``batched_s_reach`` / ``batched_mr`` collided with
+the label-join engine in query.py; the deprecated aliases introduced
+when the collision was fixed have been removed — ``batched_mr`` is
+query.py's label join, the frontier sweeps are the ``frontier_``-
+prefixed functions here, and serving code routes through ``repro.api``.)
 
 Rounds follow *linear* diameter (not the squaring closure's log₂), but
 each round is O(E) instead of O(m²) — the standard sparse/dense trade.
@@ -35,21 +37,6 @@ from .baselines import line_graph_edges
 
 __all__ = ["SparseLineGraph", "frontier_batched_s_reach",
            "frontier_batched_mr"]
-
-_DEPRECATED = {"batched_s_reach": "frontier_batched_s_reach",
-               "batched_mr": "frontier_batched_mr"}
-
-
-def __getattr__(name: str):
-    if name in _DEPRECATED:
-        import warnings
-        new = _DEPRECATED[name]
-        warnings.warn(
-            f"repro.core.frontier.{name} is deprecated (it shadowed the "
-            f"label-join engine in repro.core.query); use {new} instead",
-            DeprecationWarning, stacklevel=2)
-        return globals()[new]
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class SparseLineGraph:

@@ -39,6 +39,7 @@ only affects minimality).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -48,7 +49,31 @@ from .hypergraph import (Hypergraph, apply_edge_edits,
 from .hlindex import HLIndex, build_fast, splice_rank
 
 __all__ = ["insert_hyperedge", "delete_hyperedge", "apply_updates",
-           "component_of"]
+           "component_of", "UpdateReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateReport:
+    """What a maintenance step touched — the dirty-rows contract consumed
+    by snapshot caching (``engine.snapshot()`` re-derives only these label
+    rows; the serving layer patches only these rows of a mesh-resident
+    snapshot).
+
+    * ``scope`` — hyperedges whose labels were rebuilt (the affected
+      line-graph component(s)).
+    * ``refreshed_vertices`` — sorted vertex ids whose ``(labels_rank,
+      labels_s)`` arrays may differ from the pre-update index.  Every
+      other vertex's label row is byte-identical (the splice keeps the
+      arrays by reference and ``splice_rank`` preserves out-of-scope rank
+      values), so a padded snapshot only needs these rows re-derived.
+    * ``full_rebuild`` — True when the whole index was rebuilt (scope
+      covered the graph, rank key space exhausted, or there was no old
+      index); ``refreshed_vertices`` then covers every vertex.
+    """
+
+    scope: int
+    refreshed_vertices: np.ndarray
+    full_rebuild: bool
 
 
 def component_of(h: Hypergraph, seeds: Sequence[int]) -> Set[int]:
@@ -70,13 +95,14 @@ def _splice(new_h: Hypergraph, old_idx: HLIndex, old_to_new: np.ndarray,
             scope: np.ndarray, refresh_vertices: np.ndarray,
             builder: Callable[[Hypergraph], HLIndex],
             minimizer: Optional[Callable[[HLIndex], HLIndex]],
-            identity_map: bool) -> HLIndex:
+            identity_map: bool) -> Tuple[HLIndex, np.ndarray]:
     """Build the index for the ``scope`` hyperedges of ``new_h`` only and
     splice it over the surviving labels of ``old_idx``.  With
     ``identity_map`` (no deletions: hyperedge ids unshifted) untouched
     vertices share all three label arrays with the old index; rank
     values of out-of-scope hyperedges are preserved by ``splice_rank``,
-    so ``labels_rank`` is shared in both cases."""
+    so ``labels_rank`` is shared in both cases.  Returns ``(new_idx,
+    refreshed_vertices)`` — the rows whose label content changed."""
     if scope.size:
         sub_h, sub_verts = induced_subhypergraph(new_h, scope)
         sub_idx = builder(sub_h)
@@ -142,9 +168,14 @@ def _splice(new_h: Hypergraph, old_idx: HLIndex, old_to_new: np.ndarray,
             stats[f"sub_{key}"] = val
     stats["maintenance_scope"] = int(scope.size)
     stats["maintenance_subgraph_m"] = int(sub_h.m) if sub_h is not None else 0
-    return HLIndex(h=new_h, rank=rank, perm=perm, labels_edge=le,
-                   labels_rank=lr, labels_s=ls, dual_u=du, dual_s=ds,
-                   stats=stats)
+    idx = HLIndex(h=new_h, rank=rank, perm=perm, labels_edge=le,
+                  labels_rank=lr, labels_s=ls, dual_u=du, dual_s=ds,
+                  stats=stats)
+    # new vertices (n grew) are refreshed by construction: they either got
+    # fresh sub-labels or start empty — both differ from "no row at all"
+    refreshed = refresh.copy()
+    refreshed[old_idx.h.n:] = True
+    return idx, np.nonzero(refreshed)[0]
 
 
 def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
@@ -152,22 +183,32 @@ def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
                   deletes: Sequence[int] = (), *,
                   builder: Callable[[Hypergraph], HLIndex] = build_fast,
                   minimizer: Optional[Callable[[HLIndex], HLIndex]] = None
-                  ) -> Tuple[Hypergraph, HLIndex]:
+                  ) -> Tuple[Hypergraph, HLIndex, UpdateReport]:
     """Apply a batch of hyperedge inserts/deletes and maintain the index.
 
-    Returns ``(new_h, new_idx)``.  Construction runs only on the
+    Returns ``(new_h, new_idx, report)``.  Construction runs only on the
     affected line-graph component(s) (``builder`` on the extracted
     sub-hypergraph, ``minimizer`` applied to the sub-index if given);
     everything else is spliced from ``idx``.  ``idx=None`` builds from
-    scratch.  Answers are exactly those of a full rebuild (asserted in
+    scratch.  The ``UpdateReport`` names the vertex rows whose label
+    content changed — the dirty-rows contract snapshot caching consumes.
+    Answers are exactly those of a full rebuild (asserted in
     tests/test_maintenance.py and tests/test_property.py).
     """
     new_h, old_to_new, touched = apply_edge_edits(h, inserts, deletes)
-    if idx is None:
+
+    def rebuilt(scope_size: int) -> Tuple[Hypergraph, HLIndex, UpdateReport]:
         new_idx = builder(new_h)
         if minimizer is not None:
             new_idx = minimizer(new_idx)
-        return new_h, new_idx
+        new_idx.stats["maintenance_scope"] = scope_size
+        new_idx.stats["maintenance_subgraph_m"] = int(new_h.m)
+        return new_h, new_idx, UpdateReport(
+            scope=scope_size, refreshed_vertices=np.arange(new_h.n),
+            full_rebuild=True)
+
+    if idx is None:
+        return rebuilt(int(new_h.m))
     affected = component_of(new_h, touched) if touched.size else set()
     scope = np.fromiter(sorted(affected), np.int64, len(affected))
     # vertices of deleted hyperedges may have lost their last hyperedge
@@ -180,24 +221,24 @@ def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
     if scope.size == new_h.m or not rank_headroom:
         # everything affected (or the sparse rank key space ran out after
         # ~2^30 cumulative scope edges): plain dense rebuild
-        new_idx = builder(new_h)
-        if minimizer is not None:
-            new_idx = minimizer(new_idx)
-        new_idx.stats["maintenance_scope"] = int(scope.size)
-        new_idx.stats["maintenance_subgraph_m"] = int(new_h.m)
-        return new_h, new_idx
-    return new_h, _splice(new_h, idx, old_to_new, scope, refresh_extra,
-                          builder, minimizer,
-                          identity_map=not len(deletes))
+        return rebuilt(int(scope.size))
+    new_idx, refreshed = _splice(new_h, idx, old_to_new, scope,
+                                 refresh_extra, builder, minimizer,
+                                 identity_map=not len(deletes))
+    return new_h, new_idx, UpdateReport(scope=int(scope.size),
+                                        refreshed_vertices=refreshed,
+                                        full_rebuild=False)
 
 
 def insert_hyperedge(h: Hypergraph, idx: HLIndex,
                      vertices: Sequence[int]) -> Tuple[Hypergraph, HLIndex]:
     """Insert a hyperedge; returns (new graph, maintained index)."""
-    return apply_updates(h, idx, inserts=[vertices])
+    new_h, new_idx, _ = apply_updates(h, idx, inserts=[vertices])
+    return new_h, new_idx
 
 
 def delete_hyperedge(h: Hypergraph, idx: HLIndex, edge_id: int
                      ) -> Tuple[Hypergraph, HLIndex]:
     """Delete a hyperedge; rebuilds every fragment of its old component."""
-    return apply_updates(h, idx, deletes=[edge_id])
+    new_h, new_idx, _ = apply_updates(h, idx, deletes=[edge_id])
+    return new_h, new_idx

@@ -81,6 +81,24 @@ def mr_query_dicts(lu: Dict[int, int], lv: Dict[int, int],
 # JAX batched engine
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
+def _mesh_row_scatter(spec2d, spec1d, donate: bool):
+    """Jitted dirty-row scatter for ``to_mesh(base=, dirty_rows=)``,
+    cached per (sharding pair, donation) so periodic same-shaped
+    snapshot refreshes reuse one compiled program instead of re-tracing
+    every time (``NamedSharding`` is hashable, so the shardings are the
+    cache key; shapes key jax's own jit cache underneath).  With
+    ``donate`` the base tensors are donated to XLA, so the patch updates
+    in place instead of allocating a second full label-mass copy."""
+    @functools.partial(jax.jit, out_shardings=(spec2d, spec2d, spec1d),
+                       donate_argnums=(0, 1, 2) if donate else ())
+    def scatter(ranks, svals, lengths, idx, new_r, new_s, new_l):
+        return (ranks.at[idx].set(new_r),
+                svals.at[idx].set(new_s),
+                lengths.at[idx].set(new_l))
+    return scatter
+
+
 @dataclasses.dataclass(eq=False)    # identity equality/hash: fields are arrays
 class DeviceSnapshot:
     """Padded per-vertex label tensors on device, served by ``batched_mr``.
@@ -113,6 +131,13 @@ class DeviceSnapshot:
     snapshot with ``snap.version != engine.version`` is stale.
     ``to_mesh`` propagates the version, so resharded copies stay
     comparable.
+
+    Snapshots are immutable; incremental refresh produces *new* snapshots
+    that reuse the old tensors: ``patch_rows`` replaces only the label
+    rows a scoped update touched (the ``UpdateReport.refreshed_vertices``
+    contract from ``repro.core.maintenance``), and ``to_mesh(base=...,
+    dirty_rows=...)`` re-lands only those rows into an already
+    mesh-resident copy instead of re-transferring the whole label mass.
     """
 
     ranks: jnp.ndarray
@@ -134,8 +159,10 @@ class DeviceSnapshot:
         ranks, svals, lengths = idx.as_padded()
         return cls.from_padded(ranks, svals, lengths, backend, version)
 
-    def to_mesh(self, mesh, axes: Optional[Tuple[str, str]] = None
-                ) -> "DeviceSnapshot":
+    def to_mesh(self, mesh, axes: Optional[Tuple[str, str]] = None, *,
+                base: Optional["DeviceSnapshot"] = None,
+                dirty_rows=None,
+                donate_base: bool = False) -> "DeviceSnapshot":
         """Return this snapshot sharded over ``mesh`` via ``NamedSharding``:
         vertex rows split along ``axes[0]``, label columns along
         ``axes[1]`` (``lengths`` along ``axes[0]`` only).  ``axes=None``
@@ -147,6 +174,20 @@ class DeviceSnapshot:
         returned snapshot is committed to the mesh's devices and persists
         there across query batches; ``batched_mr`` consumes it directly
         (GSPMD partitions the gather + join).
+
+        ``base`` + ``dirty_rows`` is the incremental re-land path used by
+        the serving layer after a scoped update: when ``base`` is a
+        previously ``to_mesh``-ed copy whose padded geometry matches this
+        snapshot's, only the ``dirty_rows`` label rows are transferred and
+        scattered into the resident tensors (everything else of ``base``
+        is byte-identical by the ``UpdateReport`` contract).  On a
+        geometry change (label width or vertex count re-padded
+        differently) it falls back to a full re-land — answers are
+        identical either way, only the transfer volume differs.
+        ``donate_base`` additionally donates ``base``'s buffers to the
+        scatter so the patch is in place (no transient second copy of
+        the label mass) — ``base`` must not be used afterwards.  Ignored
+        on CPU devices, where XLA cannot donate.
         """
         from jax.sharding import NamedSharding, PartitionSpec as P
         if axes is None:
@@ -160,18 +201,83 @@ class DeviceSnapshot:
         n, lmax = self.ranks.shape
         n_pad = -(-n // r) * r if n else 0
         l_pad = -(-lmax // c) * c if lmax else 0
+        spec2d = NamedSharding(mesh, P(row_ax, col_ax))
+        spec1d = NamedSharding(mesh, P(row_ax))
+        if (base is not None and dirty_rows is not None
+                and tuple(base.ranks.shape) == (n_pad, l_pad)):
+            rows = np.asarray(dirty_rows, np.int64)
+            pr = np.full((rows.size, l_pad), np.iinfo(np.int32).max,
+                         np.int32)
+            ps = np.zeros((rows.size, l_pad), np.int32)
+            pl = np.zeros(rows.size, np.int32)
+            pr[:, :lmax] = np.asarray(self.ranks)[rows]
+            ps[:, :lmax] = np.asarray(self.svals)[rows]
+            pl[:] = np.asarray(self.lengths)[rows]
+            donate = donate_base and all(
+                d.platform != "cpu" for d in mesh.devices.flat)
+            ranks, svals, lengths = _mesh_row_scatter(spec2d, spec1d,
+                                                      donate)(
+                base.ranks, base.svals, base.lengths,
+                jnp.asarray(rows, jnp.int32), pr, ps, pl)
+            return DeviceSnapshot(ranks=ranks, svals=svals, lengths=lengths,
+                                  backend=self.backend, version=self.version)
         ranks = np.full((n_pad, l_pad), np.iinfo(np.int32).max, np.int32)
         svals = np.zeros((n_pad, l_pad), np.int32)
         lengths = np.zeros(n_pad, np.int32)
         ranks[:n, :lmax] = np.asarray(self.ranks)
         svals[:n, :lmax] = np.asarray(self.svals)
         lengths[:n] = np.asarray(self.lengths)
-        spec2d = NamedSharding(mesh, P(row_ax, col_ax))
         return DeviceSnapshot(
             ranks=jax.device_put(ranks, spec2d),
             svals=jax.device_put(svals, spec2d),
-            lengths=jax.device_put(lengths, NamedSharding(mesh, P(row_ax))),
+            lengths=jax.device_put(lengths, spec1d),
             backend=self.backend, version=self.version)
+
+    def patch_rows(self, rows, row_ranks, row_svals, row_lengths, *,
+                   n: Optional[int] = None, lmax: Optional[int] = None,
+                   version: Optional[int] = None,
+                   backend: Optional[str] = None) -> "DeviceSnapshot":
+        """A new snapshot with only ``rows`` replaced — the label-row
+        re-derivation primitive behind snapshot caching across updates.
+
+        ``row_ranks`` / ``row_svals`` are [len(rows), lmax] padded rows
+        (``pad_label_rows(..., pad_to=lmax)`` form), ``row_lengths`` the
+        true counts.  ``n`` / ``lmax`` resize the tensors first (rows
+        appended with empty sentinel rows, columns padded with sentinels
+        or sliced off) — legal because a clean row's content never
+        exceeds the new ``lmax`` by the dirty-rows contract, so resizing
+        touches only inert padding.  The result is byte-identical to a
+        from-scratch derivation in which only ``rows`` changed; every
+        untouched row is reused from this snapshot's device tensors
+        without re-transfer.
+        """
+        ranks, svals, lengths = self.ranks, self.svals, self.lengths
+        cur_n, cur_l = ranks.shape
+        n = cur_n if n is None else int(n)
+        lmax = cur_l if lmax is None else int(lmax)
+        sentinel = np.iinfo(np.int32).max
+        if lmax > cur_l:
+            ranks = jnp.pad(ranks, ((0, 0), (0, lmax - cur_l)),
+                            constant_values=sentinel)
+            svals = jnp.pad(svals, ((0, 0), (0, lmax - cur_l)))
+        elif lmax < cur_l:
+            ranks = ranks[:, :lmax]
+            svals = svals[:, :lmax]
+        if n > cur_n:
+            ranks = jnp.pad(ranks, ((0, n - cur_n), (0, 0)),
+                            constant_values=sentinel)
+            svals = jnp.pad(svals, ((0, n - cur_n), (0, 0)))
+            lengths = jnp.pad(lengths, (0, n - cur_n))
+        rows = jnp.asarray(np.asarray(rows, np.int64), jnp.int32)
+        if rows.size:
+            ranks = ranks.at[rows].set(jnp.asarray(row_ranks, jnp.int32))
+            svals = svals.at[rows].set(jnp.asarray(row_svals, jnp.int32))
+            lengths = lengths.at[rows].set(
+                jnp.asarray(row_lengths, jnp.int32))
+        return DeviceSnapshot(
+            ranks=ranks, svals=svals, lengths=lengths,
+            backend=self.backend if backend is None else backend,
+            version=self.version if version is None else int(version))
 
     @property
     def lmax(self) -> int:

@@ -1,6 +1,46 @@
-"""Serving substrate."""
-from .serve_step import make_serve_step, make_prefill_step
-from .kvcache import prefill_with_decode, greedy_decode
+"""Serving substrate.
 
-__all__ = ["make_serve_step", "make_prefill_step", "prefill_with_decode",
-           "greedy_decode"]
+Two independent serving stacks live here:
+
+* ``reach_service`` — the request-based reachability serving layer
+  (``ReachabilityService``: typed requests, futures, admission
+  micro-batching, version-keyed snapshot reuse) over any
+  ``ReachabilityEngine`` backend;
+* ``serve_step`` / ``kvcache`` — the LM decode/prefill dry-run cells.
+
+Exports resolve lazily so importing the reachability service (or
+``repro.api``) never pulls the LM model stack into the process.
+"""
+from typing import TYPE_CHECKING
+
+_LAZY = {
+    "make_serve_step": "serve_step",
+    "make_prefill_step": "serve_step",
+    "prefill_with_decode": "kvcache",
+    "greedy_decode": "kvcache",
+    "ReachabilityService": "reach_service",
+    "MRRequest": "reach_service",
+    "SReachRequest": "reach_service",
+    "ServiceStats": "reach_service",
+    "REQUEST_TYPES": "reach_service",
+}
+
+__all__ = sorted(_LAZY)
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from .kvcache import greedy_decode, prefill_with_decode      # noqa: F401
+    from .reach_service import (MRRequest, ReachabilityService,  # noqa: F401
+                                REQUEST_TYPES, ServiceStats, SReachRequest)
+    from .serve_step import make_prefill_step, make_serve_step   # noqa: F401
+
+
+def __getattr__(name: str):
+    try:
+        module = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(f"{__name__}.{module}"), name)
+    globals()[name] = value
+    return value

@@ -1,0 +1,439 @@
+"""Request-based reachability serving: ``ReachabilityService``.
+
+The engine API (``repro.core.engine``) is imperative — callers invoke
+``eng.mr_batch`` with batches they assembled themselves, and after an
+``update`` they must notice staleness and re-derive snapshots by hand.
+This module turns that surface into a *service*: callers submit typed
+requests and get futures; an admission loop coalesces whatever is
+pending into fused padded device batches and scatters the answers back.
+
+    svc = repro.api.serve(h)                    # or ReachabilityService(eng)
+    f1 = svc.mr(4, 8)                           # Future[int]
+    f2 = svc.submit(SReachRequest(4, 8, s=2))   # Future[bool]
+    f1.result(), f2.result()
+    svc.update(inserts=[[3, 7, 9]])             # serving continues
+    svc.close()
+
+Design (the three mechanisms the module exists for):
+
+* **Admission micro-batching** — pending requests are grouped by query
+  kind (``MRRequest`` vs ``SReachRequest``) and each group is padded to
+  a power-of-two bucket size (``min_bucket`` .. ``max_batch``) before
+  dispatch.  The fused ``batched_mr`` join recompiles per batch *shape*,
+  so bucketing bounds the number of distinct XLA programs to
+  ``log2(max_batch / min_bucket) + 1`` per kind instead of one per
+  distinct queue depth.  Padding slots repeat a real query pair, which
+  is semantically inert (answers past the true count are dropped before
+  scatter).  Mixed ``s`` values coalesce into one fused batch: on the
+  snapshot path every s-reach answer is ``mr >= s`` off the same join.
+* **Version-keyed snapshot reuse** — the service serves every batch off
+  one resident ``DeviceSnapshot`` keyed by ``engine.version``.  After
+  ``update()`` the swap happens *between* micro-batches (never mid
+  batch): the admission loop notices ``snap.version != engine.version``,
+  asks the engine for a fresh snapshot — which re-derives **only the
+  dirty label rows** reported by scoped maintenance
+  (``engine.dirty_rows()`` / ``DeviceSnapshot.patch_rows``) — and
+  installs it with a single atomic reference swap.
+* **Mesh-resident serving** — pass ``mesh=`` and the resident snapshot
+  lives sharded over the device mesh (``DeviceSnapshot.to_mesh``).
+  After a scoped update, only the dirty rows are re-landed into the
+  mesh-resident copy (``to_mesh(base=..., dirty_rows=...)``) instead of
+  re-transferring the whole label mass.
+
+Backends with no snapshot form (``online``, ``frontier``, ...) are
+served through their own ``mr_batch`` / ``s_reach_batch`` engines by the
+same admission loop — the service degrades, never refuses.
+
+The request-type table in docs/ARCHITECTURE.md is CI-checked against
+``REQUEST_TYPES`` (tools/check_docs.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import operator
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.engine import SnapshotUnsupported
+
+__all__ = ["MRRequest", "SReachRequest", "ReachabilityService",
+           "ServiceStats", "REQUEST_TYPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MRRequest:
+    """Problem 2: answer ``MR(u, v)`` — resolves to ``int``."""
+
+    u: int
+    v: int
+
+    kind = "mr"
+
+
+@dataclasses.dataclass(frozen=True)
+class SReachRequest:
+    """Problem 1: is there an s-walk joining ``u`` and ``v`` — resolves
+    to ``bool``.  Requests with different ``s`` coalesce into the same
+    fused batch (the snapshot path answers all of them off one join)."""
+
+    u: int
+    v: int
+    s: int
+
+    kind = "s_reach"
+
+
+Request = Union[MRRequest, SReachRequest]
+
+# kind -> request class; the serving section of docs/ARCHITECTURE.md
+# documents exactly this table and CI fails if they drift apart
+REQUEST_TYPES: Dict[str, type] = {MRRequest.kind: MRRequest,
+                                  SReachRequest.kind: SReachRequest}
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Counters the admission loop maintains (read via ``stats()``)."""
+
+    submitted: int = 0
+    answered: int = 0
+    batches: int = 0
+    padded_queries: int = 0          # bucket padding slots dispatched
+    bucket_histogram: Dict[int, int] = dataclasses.field(default_factory=dict)
+    snapshot_refreshes: int = 0
+    rows_rederived: int = 0          # label rows re-derived across refreshes
+    rows_full: int = 0               # rows a from-scratch refresh would cost
+    mesh_rows_patched: int = 0       # rows re-landed into a mesh-resident copy
+    updates: int = 0
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["bucket_histogram"] = dict(sorted(self.bucket_histogram.items()))
+        return d
+
+
+def _resolve(fut: Future, value) -> None:
+    """Resolve one future, tolerating a caller's concurrent ``cancel()``
+    (a bare ``cancelled()`` pre-check races: the cancel can land between
+    the check and ``set_result``, and the resulting InvalidStateError
+    would poison the whole micro-batch through the dispatch error
+    handler)."""
+    try:
+        fut.set_result(value)
+    except InvalidStateError:
+        pass                         # cancelled mid-dispatch: drop quietly
+
+
+def _bucket_size(q: int, min_bucket: int, max_batch: int) -> int:
+    """Smallest power-of-two >= q, clamped to [min_bucket, max_batch]."""
+    b = 1 << max(q - 1, 0).bit_length()
+    return max(min(max(b, min_bucket), max_batch), q)
+
+
+class ReachabilityService:
+    """Request-based serving over any ``ReachabilityEngine``.
+
+    Args:
+      engine: a built engine (``repro.api.build_engine``) — the service
+        owns its snapshot lifecycle from here on.
+      mesh: optional ``jax.sharding.Mesh``; the resident snapshot is
+        kept mesh-sharded (``to_mesh``) and refreshed row-wise after
+        scoped updates.  Ignored for backends with no snapshot form.
+      axes: mesh (row, column) axis names forwarded to ``to_mesh``.
+      max_batch: admission cap — at most this many requests fuse into
+        one dispatched batch (also the largest bucket shape).
+      min_bucket: smallest padded batch shape; sub-bucket batches pad up
+        to it so trickle traffic reuses one compiled program.
+      max_wait_ms: how long the background loop lingers after the first
+        pending request to let more arrivals coalesce (the classic
+        batching latency/throughput knob).  0 dispatches immediately.
+      start: start the background admission thread.  With
+        ``start=False`` the service is synchronous: call ``drain()`` to
+        process everything pending (deterministic; what the tests and
+        benchmarks use).
+    """
+
+    def __init__(self, engine, *, mesh=None,
+                 axes: Optional[Tuple[str, str]] = None,
+                 max_batch: int = 4096, min_bucket: int = 8,
+                 max_wait_ms: float = 0.5, start: bool = True):
+        if max_batch < 1 or min_bucket < 1 or min_bucket > max_batch:
+            raise ValueError(
+                f"need 1 <= min_bucket <= max_batch; got min_bucket="
+                f"{min_bucket} max_batch={max_batch}")
+        self.engine = engine
+        self.mesh = mesh
+        self.axes = axes
+        self.max_batch = int(max_batch)
+        self.min_bucket = int(min_bucket)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self._stats = ServiceStats()
+        self._pending: List[Tuple[Request, Future]] = []
+        self._cv = threading.Condition()
+        # serializes dispatch against update(): a micro-batch always runs
+        # against one coherent (engine, snapshot) pair, and the snapshot
+        # swap happens strictly between batches
+        self._dispatch_lock = threading.Lock()
+        self._snap = None            # resident serving snapshot (mesh or host)
+        self._host_snap = None       # the engine-derived snapshot _snap mirrors
+        self._snapshot_ok: Optional[bool] = None   # None = not probed yet
+        self._running = False
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "ReachabilityService":
+        with self._cv:
+            if self._running:
+                return self
+            self._running = True
+        self._thread = threading.Thread(target=self._loop,
+                                        name="reach-service", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the admission thread; everything already submitted is
+        answered first (no future is left unresolved)."""
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.drain()                 # no-thread mode: flush synchronously
+
+    def __enter__(self) -> "ReachabilityService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- request admission -------------------------------------------------
+
+    def submit(self, request: Request) -> Future:
+        """Enqueue one typed request; returns a ``Future`` resolving to
+        ``int`` (``MRRequest``) or ``bool`` (``SReachRequest``).
+
+        Validation is the same contract as ``validate_batch`` (integer
+        ids in ``[0, n)``) on a scalar fast path — admission is the
+        per-request hot loop, so it avoids array round-trips."""
+        if not isinstance(request, tuple(REQUEST_TYPES.values())):
+            raise TypeError(
+                f"expected one of {sorted(REQUEST_TYPES)} requests, got "
+                f"{type(request).__name__}")
+        n = self.engine.h.n
+        try:
+            u = operator.index(request.u)
+            v = operator.index(request.v)
+        except TypeError:
+            raise ValueError(
+                f"request vertex ids must have an integer dtype; got "
+                f"({request.u!r}, {request.v!r})") from None
+        if not 0 <= u < n or not 0 <= v < n:
+            bad = u if not 0 <= u < n else v
+            raise IndexError(
+                f"request vertex id {bad} out of range [0, {n})")
+        if request.kind == "s_reach":
+            try:
+                s = operator.index(request.s)
+            except TypeError:
+                raise ValueError(
+                    f"request s must have an integer dtype; got "
+                    f"{request.s!r}") from None
+            if s < 1:
+                raise ValueError(f"s-reachability needs s >= 1; got {s}")
+        fut: Future = Future()
+        with self._cv:
+            self._pending.append((request, fut))
+            self._stats.submitted += 1
+            self._cv.notify()
+        return fut
+
+    def submit_many(self, requests: Sequence[Request]) -> List[Future]:
+        return [self.submit(r) for r in requests]
+
+    def mr(self, u: int, v: int) -> Future:
+        return self.submit(MRRequest(int(u), int(v)))
+
+    def s_reach(self, u: int, v: int, s: int) -> Future:
+        return self.submit(SReachRequest(int(u), int(v), int(s)))
+
+    def update(self, inserts=(), deletes=()) -> None:
+        """Apply hyperedge edits through the engine.  Serving continues:
+        the stale resident snapshot keeps answering until the admission
+        loop swaps in the refreshed one before the next micro-batch."""
+        with self._dispatch_lock:
+            self.engine.update(inserts, deletes)
+            self._stats.updates += 1
+
+    def stats(self) -> ServiceStats:
+        with self._dispatch_lock:
+            return dataclasses.replace(
+                self._stats,
+                bucket_histogram=dict(self._stats.bucket_histogram))
+
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    # -- admission loop ----------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while self._running and not self._pending:
+                    self._cv.wait(timeout=0.05)
+                if not self._running and not self._pending:
+                    return
+                # linger for the full coalescing window (each submit()
+                # notify wakes the wait, so loop until the deadline or a
+                # full batch) — the latency/throughput admission knob
+                deadline = time.monotonic() + self.max_wait_s
+                while (self._running
+                        and len(self._pending) < self.max_batch):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                batch = self._pending[:self.max_batch]
+                del self._pending[:len(batch)]
+            if batch:
+                self._dispatch(batch)
+
+    def drain(self) -> int:
+        """Synchronously dispatch everything pending in the caller's
+        thread; returns the number of requests answered.  This is the
+        deterministic serving mode (``start=False``)."""
+        total = 0
+        while True:
+            with self._cv:
+                batch = self._pending[:self.max_batch]
+                del self._pending[:len(batch)]
+            if not batch:
+                return total
+            self._dispatch(batch)
+            total += len(batch)
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch(self, batch: List[Tuple[Request, Future]]) -> None:
+        try:
+            with self._dispatch_lock:
+                snap = self._refresh_snapshot()
+                groups: Dict[str, List[Tuple[Request, Future]]] = {}
+                for req, fut in batch:
+                    groups.setdefault(req.kind, []).append((req, fut))
+                for kind, group in groups.items():
+                    self._dispatch_group(kind, group, snap)
+                self._stats.answered += len(batch)
+        except Exception as exc:                       # noqa: BLE001
+            for _, fut in batch:
+                if not fut.done():
+                    fut.set_exception(exc)
+
+    def _dispatch_group(self, kind: str,
+                        group: List[Tuple[Request, Future]], snap) -> None:
+        q = len(group)
+        us = np.fromiter((r.u for r, _ in group), np.int64, q)
+        vs = np.fromiter((r.v for r, _ in group), np.int64, q)
+        bucket = _bucket_size(q, self.min_bucket, self.max_batch)
+        if bucket > q:
+            # pad with a repeat of the first (real, validated) pair —
+            # inert: answers past q are dropped before the scatter
+            us = np.concatenate([us, np.full(bucket - q, us[0])])
+            vs = np.concatenate([vs, np.full(bucket - q, vs[0])])
+        self._stats.batches += 1
+        self._stats.padded_queries += bucket - q
+        self._stats.bucket_histogram[bucket] = \
+            self._stats.bucket_histogram.get(bucket, 0) + 1
+
+        if kind == "mr":
+            if snap is not None:
+                mr = np.asarray(snap.mr(us, vs))[:q]
+            else:
+                mr = np.asarray(self.engine.mr_batch(us, vs))[:q]
+            for (_, fut), val in zip(group, mr):
+                _resolve(fut, int(val))
+            return
+
+        svals = np.fromiter((r.s for r, _ in group), np.int64, q)
+        if snap is not None:
+            # one fused join answers every s at once: s_reach == mr >= s
+            ok = np.asarray(snap.mr(us, vs))[:q] >= svals
+        elif svals.size and (svals == svals[0]).all():
+            # uniform s: the backend's native (possibly cheaper) batch path
+            ok = np.asarray(
+                self.engine.s_reach_batch(us, vs, int(svals[0])))[:q]
+        else:
+            ok = np.asarray(self.engine.mr_batch(us, vs))[:q] >= svals
+        for (_, fut), val in zip(group, ok):
+            _resolve(fut, bool(val))
+
+    # -- snapshot lifecycle ------------------------------------------------
+
+    def _refresh_snapshot(self):
+        """The version-keyed snapshot swap, run between micro-batches
+        (callers hold ``_dispatch_lock``).  Returns the resident serving
+        snapshot, or None for snapshot-less backends."""
+        eng = self.engine
+        if self._snapshot_ok is False:
+            return None
+        if self._snap is not None and self._snap.version == eng.version:
+            return self._snap
+        # capture the dirty set *before* snapshot() resets it: it is the
+        # row delta between the engine's cached snapshot and the fresh
+        # one — valid for patching our resident copy only if our copy
+        # was landed from exactly that cached object (a direct
+        # engine.snapshot()/mr_batch call by someone else re-derives and
+        # resets the delta, in which case we must re-land in full)
+        prev_host = self._host_snap
+        dirty = (eng.dirty_rows()
+                 if prev_host is not None
+                 and eng.snapshot_cache() is prev_host else None)
+        try:
+            host = eng.snapshot()
+        except SnapshotUnsupported:
+            self._snapshot_ok = False
+            return None
+        self._snapshot_ok = True
+        if host is prev_host and self._snap is not None:
+            return self._snap
+        self._stats.snapshot_refreshes += 1
+        self._stats.rows_rederived += int(eng.last_snapshot_refresh_rows)
+        self._stats.rows_full += int(eng.h.n)
+        if self.mesh is not None and not self._already_on_mesh(host):
+            base = self._snap if (prev_host is not None
+                                  and dirty is not None) else None
+            # base is private to the service and dropped at the swap, so
+            # its buffers are safe to donate (in-place patch on device)
+            snap = host.to_mesh(self.mesh, self.axes, base=base,
+                                dirty_rows=dirty if base is not None
+                                else None, donate_base=True)
+            if base is not None and snap.ranks.shape == base.ranks.shape:
+                self._stats.mesh_rows_patched += int(np.asarray(dirty).size)
+        else:
+            snap = host
+        # single reference assignment = the atomic swap; in-flight code
+        # never observes a half-updated snapshot
+        self._host_snap, self._snap = host, snap
+        return snap
+
+    def _already_on_mesh(self, snap) -> bool:
+        """True when the engine's snapshot is already sharded over this
+        service's mesh (the ``sharded`` backend derives mesh-resident
+        snapshots) — re-landing it through ``to_mesh`` would gather the
+        whole label mass to host and keep a duplicate device copy."""
+        try:
+            from jax.sharding import NamedSharding
+            sharding = snap.ranks.sharding
+        except Exception:                              # noqa: BLE001
+            return False
+        return (isinstance(sharding, NamedSharding)
+                and sharding.mesh == self.mesh)

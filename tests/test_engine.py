@@ -397,16 +397,19 @@ def test_sharded_empty_hypergraph():
                                   np.zeros(2, np.int64))
 
 
-def test_deprecated_frontier_aliases():
+def test_deprecated_frontier_aliases_removed():
+    # the PR 1 compatibility aliases are gone: the unprefixed names no
+    # longer resolve on the frontier module, and `batched_s_reach` is no
+    # longer re-exported by repro.core at all
     import repro.core as core
     import repro.core.frontier as frontier
-    with pytest.warns(DeprecationWarning):
-        assert frontier.batched_mr is frontier.frontier_batched_mr
-    with pytest.warns(DeprecationWarning):
-        assert frontier.batched_s_reach is frontier.frontier_batched_s_reach
-    with pytest.warns(DeprecationWarning):
-        assert core.batched_s_reach is frontier.frontier_batched_s_reach
-    # the label-join engine owns the unprefixed name now
+    with pytest.raises(AttributeError):
+        frontier.batched_mr
+    with pytest.raises(AttributeError):
+        frontier.batched_s_reach
+    with pytest.raises(AttributeError):
+        core.batched_s_reach
+    # the label-join engine owns the unprefixed name
     from repro.core import batched_mr
     from repro.core.query import batched_mr as query_batched_mr
     assert batched_mr is query_batched_mr

@@ -101,8 +101,9 @@ def test_batched_update_sequences_match_rebuild(use_minimizer):
             size = int(rng.integers(2, 5))
             ins.append(rng.choice(h.n + 2, size=min(size, h.n),
                                   replace=False))
-        h, idx = apply_updates(h, idx, inserts=ins, deletes=dels,
-                               minimizer=minimizer)
+        h, idx, report = apply_updates(h, idx, inserts=ins, deletes=dels,
+                                       minimizer=minimizer)
+        assert report.full_rebuild or report.scope <= h.m
         _assert_matches_oracle(idx, h)
 
 
@@ -118,7 +119,7 @@ def test_delete_isolated_hyperedge_clears_labels():
 def test_delete_everything():
     h = from_edge_lists([[0, 1], [1, 2]], n=3)
     idx = build_fast(h)
-    h2, idx2 = apply_updates(h, idx, deletes=[0, 1])
+    h2, idx2, _ = apply_updates(h, idx, deletes=[0, 1])
     assert h2.m == 0
     assert all(a.size == 0 for a in idx2.labels_s)
     assert mr_query(idx2, 0, 2) == 0

@@ -1,0 +1,479 @@
+"""Request-based serving: ReachabilityService admission micro-batching,
+version-keyed snapshot reuse across updates, dirty-row re-derivation,
+and the shared batch-input validation contract.
+
+Answers are always pinned against the independent MSTOracle; the
+partial snapshot refresh is additionally pinned *byte-identical* to a
+from-scratch derivation — caching may never change an answer, or a bit.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (MRRequest, ReachabilityService, SReachRequest,
+                       available_backends, build_engine, serve,
+                       update_capabilities)
+from repro.core import (MSTOracle, apply_edge_edits,
+                        planted_chain_hypergraph, random_hypergraph)
+from repro.core.engine import SnapshotUnsupported, validate_batch
+from repro.core.query import DeviceSnapshot
+from repro.serve.reach_service import (REQUEST_TYPES, ServiceStats,
+                                       _bucket_size)
+
+BACKENDS = available_backends()
+CAPS = update_capabilities()
+
+
+def _mixed_requests(h, rng, count):
+    reqs, answer = [], []
+    oracle = MSTOracle(h)
+    for _ in range(count):
+        u, v = int(rng.integers(h.n)), int(rng.integers(h.n))
+        mr = oracle.mr(u, v)
+        if rng.random() < 0.5:
+            reqs.append(MRRequest(u, v))
+            answer.append(mr)
+        else:
+            s = int(rng.integers(1, 5))
+            reqs.append(SReachRequest(u, v, s))
+            answer.append(mr >= s)
+    return reqs, answer
+
+
+# ---------------------------------------------------------------------------
+# service answers == oracle, on snapshot-shaped and traversal-shaped backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_service_matches_oracle(backend):
+    h = random_hypergraph(30, 45, seed=3)
+    svc = serve(h, backend, start=False)
+    rng = np.random.default_rng(7)
+    reqs, want = _mixed_requests(h, rng, 80)
+    futs = svc.submit_many(reqs)
+    assert svc.pending() == 80
+    svc.drain()
+    assert svc.pending() == 0
+    for req, fut, w in zip(reqs, futs, want):
+        got = fut.result(timeout=0)
+        assert got == w, (req, got, w)
+        assert isinstance(got, int if req.kind == "mr" else bool)
+
+
+def test_service_background_thread():
+    h = random_hypergraph(25, 35, seed=11)
+    rng = np.random.default_rng(0)
+    reqs, want = _mixed_requests(h, rng, 120)
+    with serve(h, "hl-index", max_wait_ms=1.0) as svc:
+        futs = svc.submit_many(reqs)
+        got = [f.result(timeout=60) for f in futs]
+    assert got == want
+    st = svc.stats()
+    assert st.submitted == st.answered == 120
+    assert st.batches >= 1
+
+
+def test_close_answers_everything_submitted():
+    h = random_hypergraph(20, 30, seed=5)
+    svc = serve(h, "hl-index", max_wait_ms=5.0)
+    futs = [svc.mr(0, i % h.n) for i in range(50)]
+    svc.close()
+    assert all(f.done() for f in futs)
+    # post-close submissions still answer through the synchronous drain
+    f = svc.mr(1, 2)
+    svc.drain()
+    assert f.done()
+
+
+# ---------------------------------------------------------------------------
+# admission bucketing: power-of-two padded shapes, bounded program count
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_policy():
+    assert _bucket_size(1, 8, 4096) == 8
+    assert _bucket_size(8, 8, 4096) == 8
+    assert _bucket_size(9, 8, 4096) == 16
+    assert _bucket_size(1000, 8, 4096) == 1024
+    assert _bucket_size(4097, 8, 4096) == 4097   # never truncates a batch
+    assert _bucket_size(3000, 8, 2048) == 3000
+
+
+def test_bucketing_bounds_dispatch_shapes():
+    h = random_hypergraph(30, 45, seed=3)
+    svc = serve(h, "hl-index", start=False, min_bucket=8, max_batch=64)
+    rng = np.random.default_rng(1)
+    oracle = MSTOracle(h)
+    futs = []
+    # ragged arrival pattern: many distinct queue depths
+    for q in (1, 3, 5, 9, 17, 33, 64, 64, 7):
+        futs += [svc.mr(int(rng.integers(h.n)), int(rng.integers(h.n)))
+                 for _ in range(q)]
+        svc.drain()
+    st = svc.stats()
+    for bucket in st.bucket_histogram:
+        assert bucket & (bucket - 1) == 0 and bucket >= 8   # pow2, >= min
+    # 9 ragged batches but at most log2(64/8)+1 = 4 distinct shapes
+    assert len(st.bucket_histogram) <= 4
+    assert st.padded_queries > 0
+    # padding never leaks into answers
+    for f in futs:
+        assert isinstance(f.result(timeout=0), int)
+    us = [int(rng.integers(h.n)) for _ in range(10)]
+    vs = [int(rng.integers(h.n)) for _ in range(10)]
+    fs = [svc.mr(u, v) for u, v in zip(us, vs)]
+    svc.drain()
+    for u, v, f in zip(us, vs, fs):
+        assert f.result(timeout=0) == oracle.mr(u, v)
+
+
+# ---------------------------------------------------------------------------
+# snapshot lifecycle under churn: version-keyed swap between micro-batches,
+# dirty-row re-derivation, mesh-resident row patching
+# ---------------------------------------------------------------------------
+
+def test_service_update_churn_matches_oracle():
+    rng = np.random.default_rng(9)
+    h = random_hypergraph(20, 16, seed=8)
+    svc = serve(h, "hl-index", start=False)
+    for _ in range(4):
+        ins, dels = [], []
+        if h.m > 2 and rng.random() < 0.6:
+            dels = [int(rng.integers(h.m))]
+        if rng.random() < 0.8:
+            ins = [rng.choice(h.n + 1, size=3, replace=False)]
+        svc.update(inserts=ins, deletes=dels)
+        h, _, _ = apply_edge_edits(h, ins, dels)
+        reqs, want = _mixed_requests(h, rng, 40)
+        futs = svc.submit_many(reqs)
+        svc.drain()
+        assert [f.result(timeout=0) for f in futs] == want
+    assert svc.stats().snapshot_refreshes >= 1
+
+
+def test_scoped_update_rederives_only_touched_rows():
+    # the acceptance criterion: after a scoped update the snapshot
+    # refresh touches < n rows (here: one chain component out of four)
+    h = planted_chain_hypergraph(4, 8, overlap=2, extra_size=2, seed=1)
+    svc = serve(h, "hl-index", start=False)
+    f = svc.mr(0, 1)
+    svc.drain()
+    f.result(timeout=0)
+    v0 = int(h.edge(0)[0])
+    svc.update(inserts=[[v0, v0 + 1]])
+    h2, _, _ = apply_edge_edits(h, [[v0, v0 + 1]], [])
+    oracle = MSTOracle(h2)
+    rng = np.random.default_rng(2)
+    us, vs = rng.integers(0, h2.n, 40), rng.integers(0, h2.n, 40)
+    futs = [svc.mr(int(u), int(v)) for u, v in zip(us, vs)]
+    svc.drain()
+    for u, v, fut in zip(us, vs, futs):
+        assert fut.result(timeout=0) == oracle.mr(int(u), int(v))
+    eng = svc.engine
+    assert 0 < eng.last_snapshot_refresh_rows < h2.n
+    st = svc.stats()
+    assert st.rows_rederived < st.rows_full
+
+
+def test_partial_rederivation_byte_identical_under_churn():
+    # satellite: interleaved inserts and deletes; after every scoped
+    # update the patched snapshot must equal a from-scratch derivation
+    # bit for bit, and version must track the engine
+    h = planted_chain_hypergraph(3, 6, overlap=2, extra_size=2, seed=4)
+    eng = build_engine(h, "hl-index")
+    eng.snapshot()
+    rng = np.random.default_rng(5)
+    partial_seen = 0
+    for step in range(5):
+        if step % 2 == 0:
+            v0 = int(rng.integers(h.n))
+            ins, dels = [[v0, min(v0 + 1, h.n - 1), h.n]], []
+        else:
+            ins, dels = [], [int(rng.integers(h.m))]
+        eng.update(inserts=ins, deletes=dels)
+        h, _, _ = apply_edge_edits(h, ins, dels)
+        snap = eng.snapshot()
+        assert snap.version == eng.version == step + 1
+        if 0 < eng.last_snapshot_refresh_rows < h.n:
+            partial_seen += 1
+        fresh = DeviceSnapshot.from_hlindex(eng.idx, "hl-index",
+                                            version=eng.version)
+        np.testing.assert_array_equal(np.asarray(snap.ranks),
+                                      np.asarray(fresh.ranks))
+        np.testing.assert_array_equal(np.asarray(snap.svals),
+                                      np.asarray(fresh.svals))
+        np.testing.assert_array_equal(np.asarray(snap.lengths),
+                                      np.asarray(fresh.lengths))
+    assert partial_seen > 0        # the scoped path actually exercised
+
+
+def test_version_propagates_through_to_mesh_under_churn():
+    # satellite: DeviceSnapshot.version survives to_mesh across multiple
+    # interleaved update() calls, so mesh-resident staleness stays
+    # detectable at every step
+    from repro.core.distributed import default_line_graph_mesh
+    mesh = default_line_graph_mesh()
+    h = planted_chain_hypergraph(3, 6, overlap=2, extra_size=2, seed=6)
+    eng = build_engine(h, "hl-index")
+    sharded = eng.snapshot().to_mesh(mesh)
+    assert sharded.version == 0
+    for step in range(3):
+        v0 = int(h.edge(0)[0])
+        eng.update(inserts=[[v0, v0 + 1, h.n + step]])
+        h, _, _ = apply_edge_edits(h, [[v0, v0 + 1, h.n + step]], [])
+        assert sharded.version != eng.version      # old copy: stale
+        dirty = eng.dirty_rows()
+        fresh = eng.snapshot()
+        new_sharded = fresh.to_mesh(
+            mesh, base=sharded if dirty is not None else None,
+            dirty_rows=dirty)
+        assert new_sharded.version == eng.version == step + 1
+        full = fresh.to_mesh(mesh)
+        np.testing.assert_array_equal(np.asarray(new_sharded.ranks),
+                                      np.asarray(full.ranks))
+        np.testing.assert_array_equal(np.asarray(new_sharded.svals),
+                                      np.asarray(full.svals))
+        np.testing.assert_array_equal(np.asarray(new_sharded.lengths),
+                                      np.asarray(full.lengths))
+        oracle = MSTOracle(h)
+        rng = np.random.default_rng(step)
+        us, vs = rng.integers(0, h.n, 20), rng.integers(0, h.n, 20)
+        want = np.array([oracle.mr(int(u), int(v))
+                         for u, v in zip(us, vs)], np.int64)
+        np.testing.assert_array_equal(
+            np.asarray(new_sharded.mr(us, vs)).astype(np.int64), want)
+        sharded = new_sharded
+
+
+def test_mesh_resident_service_row_patches():
+    from repro.core.distributed import default_line_graph_mesh
+    mesh = default_line_graph_mesh()
+    h = planted_chain_hypergraph(4, 8, overlap=2, extra_size=2, seed=1)
+    svc = serve(h, "hl-index", mesh=mesh, start=False)
+    f = svc.mr(0, 1)
+    svc.drain()
+    f.result(timeout=0)
+    v0 = int(h.edge(0)[0])
+    svc.update(inserts=[[v0, v0 + 1]])
+    h2, _, _ = apply_edge_edits(h, [[v0, v0 + 1]], [])
+    oracle = MSTOracle(h2)
+    rng = np.random.default_rng(3)
+    us, vs = rng.integers(0, h2.n, 30), rng.integers(0, h2.n, 30)
+    futs = [svc.mr(int(u), int(v)) for u, v in zip(us, vs)]
+    svc.drain()
+    for u, v, fut in zip(us, vs, futs):
+        assert fut.result(timeout=0) == oracle.mr(int(u), int(v))
+    st = svc.stats()
+    assert 0 < st.mesh_rows_patched < h2.n
+
+
+def test_mesh_refresh_with_shared_engine_stays_correct():
+    # regression: a direct engine.snapshot() call between the service's
+    # refreshes resets the engine's dirty set, so the delta no longer
+    # describes the service's landed copy — the service must detect that
+    # (snapshot_cache identity) and re-land in full rather than patch a
+    # partial delta over a stale mesh base.  The graph is built so the
+    # padded geometry stays constant across the updates (an untouched
+    # long chain C pins lmax), which is exactly the case where a naive
+    # patch would silently serve stale rows (reproduced: 4 wrong answers
+    # without the snapshot_cache identity guard).
+    from repro.core import from_edge_lists
+    from repro.core.distributed import default_line_graph_mesh
+    mesh = default_line_graph_mesh()
+    edges = [[0, 1, 2], [1, 2, 3],            # chain A
+             [10, 11, 12], [11, 12, 13]]      # chain B
+    for i in range(10):                        # chain C dominates lmax
+        edges.append([20 + 2 * i, 21 + 2 * i, 22 + 2 * i, 23 + 2 * i])
+    h = from_edge_lists(edges)
+    eng = build_engine(h, "hl-index")
+    svc = serve(eng, mesh=mesh, start=False)
+    f = svc.mr(0, 1)
+    svc.drain()
+    f.result(timeout=0)                        # mesh copy landed at v0
+    ins1, ins2 = [[0, 1, 2, 3]], [[10, 11, 12, 13]]   # change MR in A, B
+    svc.update(inserts=ins1)                   # dirty = chain-A rows
+    eng.snapshot()                             # external consumer: resets
+    svc.update(inserts=ins2)                   # dirty = chain-B rows only
+    h2, _, _ = apply_edge_edits(h, ins1, [])
+    h3, _, _ = apply_edge_edits(h2, ins2, [])
+    oracle = MSTOracle(h3)
+    us = list(range(h3.n))
+    vs = [3] * h3.n
+    futs = [svc.mr(u, v) for u, v in zip(us, vs)]
+    svc.drain()
+    for u, v, fut in zip(us, vs, futs):
+        assert fut.result(timeout=0) == oracle.mr(u, v), (u, v)
+
+
+def test_admission_window_coalesces_trickle_arrivals():
+    # the coalescing wait must survive per-submit notifies: requests
+    # trickling in during the window end up in one batch, not many
+    h = random_hypergraph(15, 20, seed=0)
+    svc = serve(h, "hl-index", max_wait_ms=400.0, max_batch=64)
+    try:
+        futs = []
+        for _ in range(10):
+            futs.append(svc.mr(0, 1))
+            time.sleep(0.02)          # well inside the 400 ms window
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        svc.close()
+    st = svc.stats()
+    assert st.batches <= 3, st.batches   # not one dispatch per arrival
+
+
+def test_dirty_rows_contract():
+    h = planted_chain_hypergraph(4, 8, overlap=2, extra_size=2, seed=1)
+    eng = build_engine(h, "hl-index")
+    assert eng.dirty_rows().size == 0
+    eng.snapshot()
+    v0 = int(h.edge(0)[0])
+    eng.update(inserts=[[v0, v0 + 1]])
+    dirty = eng.dirty_rows()
+    assert dirty is not None and 0 < dirty.size < eng.h.n
+    eng.snapshot()
+    assert eng.dirty_rows().size == 0             # reset after re-derive
+    # rebuild-capability backends report all-dirty (None)
+    ce = build_engine(h, "closure")
+    ce.snapshot()
+    ce.update(inserts=[[0, 1]])
+    assert ce.dirty_rows() is None
+    ce.snapshot()
+    assert ce.dirty_rows().size == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: centralized batch-input validation — identical errors everywhere
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batch_validation_uniform_across_backends(backend):
+    h = random_hypergraph(12, 14, seed=0)
+    eng = build_engine(h, backend)
+    with pytest.raises(ValueError, match="length mismatch"):
+        eng.mr_batch([0, 1], [2])
+    with pytest.raises(ValueError, match="integer dtype"):
+        eng.mr_batch([0.5, 1.5], [2, 3])
+    with pytest.raises(IndexError, match="out of range"):
+        eng.mr_batch([0, 1], [2, h.n])
+    with pytest.raises(IndexError, match="out of range"):
+        eng.s_reach_batch([-1], [2], 2)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.mr_batch(np.zeros((2, 2), np.int64), np.zeros((2, 2), np.int64))
+    # empty batches are legal everywhere
+    assert len(eng.mr_batch([], [])) == 0
+
+
+def test_validate_batch_helper():
+    us, vs = validate_batch([1, 2], np.array([3, 4], np.int32), 5)
+    assert us.dtype == vs.dtype == np.int64
+    with pytest.raises(IndexError):
+        validate_batch([0], [5], 5)
+    validate_batch([], [], 0)                      # empty always fine
+
+
+def test_submit_validation():
+    h = random_hypergraph(10, 12, seed=0)
+    svc = serve(h, "hl-index", start=False)
+    with pytest.raises(IndexError, match="out of range"):
+        svc.submit(MRRequest(0, h.n))
+    with pytest.raises(ValueError, match="s >= 1"):
+        svc.submit(SReachRequest(0, 1, 0))
+    with pytest.raises(ValueError, match="integer dtype"):
+        svc.submit(MRRequest(0.5, 1))
+    with pytest.raises(ValueError, match="integer dtype"):
+        svc.submit(SReachRequest(0, 1, 1.5))       # same contract for s
+    with pytest.raises(TypeError, match="requests"):
+        svc.submit((0, 1))
+    assert svc.pending() == 0                      # nothing half-admitted
+
+
+def test_rebuild_update_drops_stale_snapshot():
+    # rebuild backends can never patch (all rows dirty), so update()
+    # must release the old snapshot immediately instead of holding it
+    # resident through the recompute (they are the memory-bound regime)
+    h = random_hypergraph(16, 12, seed=9)
+    for backend in ("closure", "sharded"):
+        eng = build_engine(h, backend)
+        eng.snapshot()
+        eng.update(inserts=[[0, 3, 7]])
+        assert eng.snapshot_cache() is None
+        assert eng.snapshot().version == 1         # and re-derives fine
+
+
+def test_mesh_service_on_sharded_backend_reuses_resident_snapshot():
+    # the sharded backend's snapshot is already mesh-sharded; the
+    # service must serve it directly, not gather-and-re-land a duplicate
+    from repro.core.distributed import default_line_graph_mesh
+    mesh = default_line_graph_mesh()
+    h = random_hypergraph(30, 20, seed=6)
+    svc = serve(h, "sharded", mesh=mesh, start=False)
+    f = svc.mr(0, 1)
+    svc.drain()
+    f.result(timeout=0)
+    assert svc._snap is svc.engine.snapshot_cache()
+    oracle = MSTOracle(h)
+    rng = np.random.default_rng(1)
+    us, vs = rng.integers(0, h.n, 30), rng.integers(0, h.n, 30)
+    futs = [svc.mr(int(u), int(v)) for u, v in zip(us, vs)]
+    svc.drain()
+    for u, v, fut in zip(us, vs, futs):
+        assert fut.result(timeout=0) == oracle.mr(int(u), int(v))
+
+
+# ---------------------------------------------------------------------------
+# facade + request-type registry
+# ---------------------------------------------------------------------------
+
+def test_serve_facade():
+    h = random_hypergraph(15, 20, seed=2)
+    svc = serve(h, "hl-index", start=False, max_batch=32, min_bucket=4)
+    assert svc.max_batch == 32 and svc.min_bucket == 4
+    assert svc.engine.name == "hl-index"
+    eng = build_engine(h, "online")
+    svc2 = serve(eng, start=False)
+    assert svc2.engine is eng
+    with pytest.raises(ValueError, match="already-built"):
+        serve(eng, start=False, minimize_labels=False)
+    # explicit backend / batch_hint with a built engine would be
+    # silently ignored — must raise instead
+    with pytest.raises(ValueError, match="already-built"):
+        serve(eng, "closure", start=False)
+    with pytest.raises(ValueError, match="already-built"):
+        serve(eng, start=False, batch_hint=10_000)
+    with pytest.raises(ValueError, match="min_bucket"):
+        ReachabilityService(eng, min_bucket=64, max_batch=8, start=False)
+
+
+def test_request_types_registry():
+    assert set(REQUEST_TYPES) == {"mr", "s_reach"}
+    for kind, cls in REQUEST_TYPES.items():
+        assert cls.kind == kind
+    # frozen dataclasses: requests are immutable (safe across threads)
+    req = MRRequest(1, 2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        req.u = 3
+
+
+def test_service_on_snapshotless_backend_never_snapshots():
+    h = random_hypergraph(15, 20, seed=2)
+    svc = serve(h, "online", start=False)
+    futs = [svc.mr(0, i % h.n) for i in range(10)]
+    futs.append(svc.s_reach(0, 1, 2))
+    svc.drain()
+    for f in futs:
+        f.result(timeout=0)
+    assert svc.stats().snapshot_refreshes == 0
+    with pytest.raises(SnapshotUnsupported):
+        svc.engine.snapshot()
+
+
+def test_service_stats_shape():
+    st = ServiceStats()
+    d = st.as_dict()
+    assert set(d) >= {"submitted", "answered", "batches", "padded_queries",
+                      "bucket_histogram", "snapshot_refreshes",
+                      "rows_rederived", "rows_full", "mesh_rows_patched",
+                      "updates"}

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Three checks, so documentation cannot silently drift from the code:
+Four checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -14,6 +14,11 @@ Three checks, so documentation cannot silently drift from the code:
    and agrees with the live `repro.api.update_capabilities()` —
    misdeclaring how a backend absorbs hyperedge updates fails the
    build.
+4. The serving request-type table in docs/ARCHITECTURE.md (rows of the
+   form ``| `MRRequest` | `mr` | ... |``) matches the live
+   `repro.serve.reach_service.REQUEST_TYPES` both ways — adding,
+   renaming, or removing a request type without documenting it fails
+   the build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -32,6 +37,8 @@ _TABLE_ROW = re.compile(r"^\|\s*`([^`]+)`", re.M)
 _CAPABILITY_ROW = re.compile(
     r"^\|\s*`([^`]+)`\s*\|\s*(scoped|incremental|rebuild|unsupported)\s*\|",
     re.M)
+_REQUEST_ROW = re.compile(
+    r"^\|\s*`(\w+Request)`\s*\|\s*`(\w+)`\s*\|", re.M)
 
 
 def doc_files():
@@ -93,17 +100,48 @@ def check_update_capability_table():
     return problems
 
 
+def check_request_type_table():
+    from repro.serve.reach_service import REQUEST_TYPES
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    documented = {kind: cls_name
+                  for cls_name, kind in _REQUEST_ROW.findall(arch.read_text())}
+    problems = []
+    for kind, cls in REQUEST_TYPES.items():
+        if kind not in documented:
+            problems.append(
+                f"docs/ARCHITECTURE.md request-type table is missing the "
+                f"`{cls.__name__}` (kind `{kind}`) row")
+        elif documented[kind] != cls.__name__:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents kind `{kind}` as "
+                f"`{documented[kind]}` but the live service class is "
+                f"`{cls.__name__}`")
+    for kind in documented:
+        if kind not in REQUEST_TYPES:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents request kind `{kind}` "
+                f"(`{documented[kind]}`) that the live "
+                f"repro.serve.reach_service.REQUEST_TYPES does not have")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_backend_table()
-                + check_update_capability_table())
+                + check_update_capability_table()
+                + check_request_type_table())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
         return 1
     from repro.api import available_backends, update_capabilities
+    from repro.serve.reach_service import REQUEST_TYPES
     print(f"docs OK: links resolve in {len(doc_files())} files; "
           f"backend table covers {available_backends()}; update "
-          f"capabilities match {update_capabilities()}")
+          f"capabilities match {update_capabilities()}; request types "
+          f"match {sorted(REQUEST_TYPES)}")
     return 0
 
 
