@@ -55,10 +55,27 @@ pass it:
     eng = build_engine(h, backend="sharded", mesh=mesh, schedule="ring")
     eng.mr_batch(us, vs)             # served off the block-sharded W*
 
+Index **construction** itself shards over the mesh too — the one stage
+that used to be host-serial (see ``repro.core.hlindex.build_sharded``):
+
+    eng = build_engine(h, "hl-index", mesh=mesh)      # auto: sharded build
+    eng = build_engine(h, "hl-index", construction="sharded", workers=4)
+    eng = build_engine(h, "sharded", mesh=mesh, build_labels=True)
+
+The sharded builder partitions the rank-ordered root sequence at
+line-graph component boundaries, precomputes the shared neighbor index
+as one CSR (overlaps on the mesh when one is passed), and merges with a
+deterministic reconciliation pass — labels are byte-identical to the
+serial ``build_fast`` (property-tested), so every downstream contract
+(scoped maintenance splice, dirty-rows snapshot caching, serving) is
+unchanged.  ``build_labels=True`` flips the ``sharded`` backend from the
+resident-closure regime to serving mesh-sharded label snapshots.
+
 ``make_mesh`` (re-exported from ``repro.compat``) hides jax-version API
 drift; ``snap.to_mesh(mesh)`` re-lands any label snapshot sharded over a
 mesh.  The architecture — data flow, backend catalogue, planner policy,
-and the sharding schedules — is documented in ``docs/ARCHITECTURE.md``.
+construction modes, and the sharding schedules — is documented in
+``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 

@@ -9,12 +9,14 @@ same name; the deprecated compatibility aliases are gone.  New code
 should go through the unified facade in ``repro.api`` /
 ``repro.core.engine`` instead of either raw function.
 """
-from .hypergraph import (Hypergraph, from_edge_lists, compact,
+from .hypergraph import (Hypergraph, NeighborCSR, neighbor_csr,
+                         from_edge_lists, compact,
                          induced_subhypergraph, apply_edge_edits,
                          random_hypergraph, planted_chain_hypergraph,
                          colocation_hypergraph, paper_figure1)
 from .online import mr_online, precompute_neighbors, NeighborCache
-from .hlindex import HLIndex, build_basic, build_fast
+from .hlindex import (HLIndex, build_basic, build_fast, build_sharded,
+                      CONSTRUCTION_MODES)
 from .minimal import minimize, exact_minimize
 from .query import (mr_query, s_reach_query, mr_query_dicts, PaddedIndex,
                     batched_mr)
@@ -33,11 +35,13 @@ from .engine import (ReachabilityEngine, DeviceSnapshot, SnapshotUnsupported,
 from .engine import build as build_engine
 
 __all__ = [
-    "Hypergraph", "from_edge_lists", "compact", "induced_subhypergraph",
+    "Hypergraph", "NeighborCSR", "neighbor_csr",
+    "from_edge_lists", "compact", "induced_subhypergraph",
     "apply_edge_edits", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
     "mr_online", "precompute_neighbors", "NeighborCache",
-    "HLIndex", "build_basic", "build_fast", "minimize", "exact_minimize",
+    "HLIndex", "build_basic", "build_fast", "build_sharded",
+    "CONSTRUCTION_MODES", "minimize", "exact_minimize",
     "mr_query", "s_reach_query", "mr_query_dicts", "PaddedIndex", "batched_mr",
     "maxmin_matmul", "maxmin_closure", "boolean_closure",
     "threshold_closure_mr", "mr_matrix", "mr_oracle_dense",

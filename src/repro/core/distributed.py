@@ -44,7 +44,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
 from .engine import _EngineBase, register_backend, validate_batch
-from .query import DeviceSnapshot
+from .hlindex import HLIndex, build_sharded
+from .minimal import minimize
+from .query import DeviceSnapshot, mr_query, s_reach_query
 
 __all__ = [
     "pad_for_mesh", "sharded_maxmin_round", "sharded_maxmin_closure",
@@ -290,6 +292,17 @@ class ShardedEngine(_EngineBase):
     visible devices (``default_line_graph_mesh``); unit axes degrade to
     single-device execution (the collectives become no-ops), so the same
     engine runs on 1 host device and a 16×16 pod slice.
+
+    ``build_labels=True`` switches the backend from the closure regime to
+    the **label regime**: instead of keeping W* [m², O(m²/P) per device]
+    resident, build runs sharded HL-index construction
+    (``repro.core.hlindex.build_sharded`` — neighbor overlaps computed on
+    this mesh, per-device component shards, byte-identical to
+    ``build_fast``) and serves queries off the mesh-sharded **label**
+    snapshot [n·Lmax ≪ m²].  Scalar queries answer through the paper's
+    host merge-join; updates rebuild the labels through the same sharded
+    builder (capability stays ``rebuild``).  This is the memory-lean
+    serving shape for graphs whose closure no longer fits the mesh.
     """
 
     name = "sharded"
@@ -297,16 +310,29 @@ class ShardedEngine(_EngineBase):
 
     def __init__(self, h, mesh: Mesh, axes: Tuple[str, str],
                  schedule: str, w_star_padded, m_true: int,
-                 rounds: Optional[int] = None):
+                 rounds: Optional[int] = None,
+                 idx: Optional[HLIndex] = None,
+                 minimizer=None, workers: Optional[int] = None,
+                 num_shards: Optional[int] = None):
         super().__init__(h)
         self.mesh = mesh
         self.axes = axes
         self.schedule = schedule
         self.rounds = rounds
         self._w_star = w_star_padded       # [mp, mp] sharded P(*axes)
-        self._m_padded = int(w_star_padded.shape[0])
+        self._m_padded = (int(w_star_padded.shape[0])
+                          if w_star_padded is not None else 0)
         self._m_true = m_true
+        self._idx = idx                    # label regime (build_labels=True)
+        self._minimizer = minimizer
+        self._workers = workers
+        self._num_shards = num_shards
         self._snap: Optional[DeviceSnapshot] = None
+
+    @property
+    def build_labels(self) -> bool:
+        """True when this engine serves labels instead of the closure."""
+        return self._idx is not None
 
     @staticmethod
     def _closure_of(h, mesh, axes, schedule, rounds):
@@ -324,13 +350,21 @@ class ShardedEngine(_EngineBase):
     def build(cls, h, *, mesh: Optional[Mesh] = None,
               schedule: str = "allgather",
               axes: Optional[Tuple[str, str]] = None,
-              rounds: Optional[int] = None) -> "ShardedEngine":
+              rounds: Optional[int] = None,
+              build_labels: bool = False,
+              minimize_labels: bool = True,
+              workers: Optional[int] = None,
+              num_shards: Optional[int] = None) -> "ShardedEngine":
         """``schedule`` ∈ {"allgather", "ring"} picks the collective plan
         (see module docstring); ``rounds`` caps the squaring ladder
         (None = ⌈log2 mp⌉, exact).  ``axes`` names the (row, column) mesh
         axes; None uses the mesh's own last two axis names (so any
         axis naming works), or ``("data", "model")`` when the mesh is
-        built here."""
+        built here.  ``build_labels=True`` builds the HL-index with
+        sharded construction on this mesh instead of the resident
+        closure (``minimize_labels`` / ``workers`` / ``num_shards``
+        configure it); the closure knobs ``schedule`` / ``rounds`` are
+        then unused."""
         if axes is None:
             axes = (("data", "model") if mesh is None
                     else tuple(mesh.axis_names[-2:]))
@@ -340,27 +374,51 @@ class ShardedEngine(_EngineBase):
             raise ValueError(
                 f"the sharded backend needs a mesh with >= 2 axes to 2-D "
                 f"block-shard over; got axis names {mesh.axis_names}")
+        if build_labels:
+            minimizer = minimize if minimize_labels else None
+            idx = build_sharded(h, mesh=mesh, minimizer=minimizer,
+                                workers=workers, num_shards=num_shards)
+            return cls(h, mesh, axes, schedule, None, h.m, rounds,
+                       idx=idx, minimizer=minimizer, workers=workers,
+                       num_shards=num_shards)
         w_star, m_true = cls._closure_of(h, mesh, axes, schedule, rounds)
         return cls(h, mesh, axes, schedule, w_star, m_true, rounds)
 
     def update(self, inserts=(), deletes=()) -> None:
-        """Recompute the block-sharded closure for the edited graph on the
-        same mesh/schedule (no incremental form for dense closures) and
-        invalidate the mesh-sharded snapshot so the next ``snapshot()`` /
-        ``to_mesh`` re-derives a coherent one."""
+        """Recompute the resident structure for the edited graph on the
+        same mesh (the block-sharded closure, or the sharded-built labels
+        in the ``build_labels`` regime — no incremental form either way,
+        capability "rebuild") and invalidate the mesh-sharded snapshot so
+        the next ``snapshot()`` / ``to_mesh`` re-derives a coherent one."""
         from .hypergraph import apply_edge_edits
         new_h, _, _ = apply_edge_edits(self.h, inserts, deletes)
-        self._w_star, self._m_true = self._closure_of(
-            new_h, self.mesh, self.axes, self.schedule, self.rounds)
-        self._m_padded = int(self._w_star.shape[0])
+        if self._idx is not None:
+            self._idx = build_sharded(new_h, mesh=self.mesh,
+                                      minimizer=self._minimizer,
+                                      workers=self._workers,
+                                      num_shards=self._num_shards)
+            self._m_true = new_h.m
+        else:
+            self._w_star, self._m_true = self._closure_of(
+                new_h, self.mesh, self.axes, self.schedule, self.rounds)
+            self._m_padded = int(self._w_star.shape[0])
         self._graph_changed(new_h)
 
-    # -- queries: everything routes through the resident snapshot --------
+    # -- queries: everything routes through the resident snapshot (label
+    # regime scalars short-circuit to the paper's host merge-join) -------
 
     def mr(self, u: int, v: int) -> int:
+        if self._idx is not None:
+            # the closure regime validates scalars through the batch
+            # path; the label short-circuit rejects the same inputs
+            self._check_vertex_ids(u, v)
+            return mr_query(self._idx, int(u), int(v))
         return int(self.mr_batch(np.array([int(u)]), np.array([int(v)]))[0])
 
     def s_reach(self, u: int, v: int, s: int) -> bool:
+        if self._idx is not None:
+            self._check_vertex_ids(u, v)
+            return s_reach_query(self._idx, int(u), int(v), int(s))
         return self.mr(u, v) >= int(s)
 
     def mr_batch(self, us, vs) -> np.ndarray:
@@ -378,13 +436,21 @@ class ShardedEngine(_EngineBase):
             self._dirty_rows = np.empty(0, np.int64)
             # every query path serves off the snapshot from here on — free
             # the closure so the resident footprint is the snapshot alone
-            # (the regime this backend exists for is memory-bound)
+            # (the regime this backend exists for is memory-bound).  The
+            # label regime keeps its index: scalar queries and rebuilds
+            # still consume it, and it is the small structure here.
             self._w_star = None
         return self._snap
 
     def _build_snapshot(self) -> DeviceSnapshot:
         h, mesh = self.h, self.mesh
         row_ax, col_ax = self.axes
+        if self._idx is not None:
+            snap = DeviceSnapshot.from_hlindex(self._idx, self.name,
+                                               version=self.version)
+            if h.n == 0 or snap.lmax == 0:
+                return snap            # nothing to shard over the mesh
+            return snap.to_mesh(mesh, self.axes)
         if self._m_true == 0 or h.n == 0:
             z = np.zeros((h.n, 0), np.int32)
             return DeviceSnapshot.from_padded(z, z, np.zeros(h.n, np.int32),
@@ -440,6 +506,8 @@ class ShardedEngine(_EngineBase):
         total = 0
         if self._w_star is not None:
             total += self._m_padded * self._m_padded * 4
+        if self._idx is not None:
+            total += self._idx.nbytes()
         if self._snap is not None:
             total += self._snap.nbytes()
         return total

@@ -67,12 +67,14 @@ exactly this contract to swap snapshots between micro-batches.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
 from .hypergraph import Hypergraph, apply_edge_edits
-from .hlindex import HLIndex, build_basic, build_fast, pad_label_rows
+from .hlindex import (CONSTRUCTION_MODES, HLIndex, build_basic, build_fast,
+                      build_sharded, pad_label_rows)
 from .minimal import minimize
 from .maintenance import apply_updates
 from .query import DeviceSnapshot, mr_query, s_reach_query
@@ -89,7 +91,7 @@ __all__ = [
     "update_capabilities", "plan_backend", "build", "validate_batch",
     "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
     "ThresholdEngine", "MSTOracleEngine", "ClosureEngine",
-    "SINGLE_DEVICE_CLOSURE_BUDGET",
+    "SINGLE_DEVICE_CLOSURE_BUDGET", "CONSTRUCTION_MODES",
 ]
 
 
@@ -212,6 +214,17 @@ class _EngineBase:
 
     def mr(self, u: int, v: int) -> int:
         raise NotImplementedError
+
+    def _check_vertex_ids(self, *ids) -> None:
+        """Scalar-path counterpart of ``validate_batch``: backends whose
+        ``mr`` / ``s_reach`` index host structures directly call this
+        first, so an out-of-range id raises the same ``IndexError`` as
+        the batch paths instead of a Python negative index silently
+        answering from the wrong row."""
+        for x in ids:
+            if not 0 <= int(x) < self.h.n:
+                raise IndexError(
+                    f"vertex id {int(x)} out of range [0, {self.h.n})")
 
     def update(self, inserts=(), deletes=()) -> None:
         raise UpdateUnsupported(
@@ -343,7 +356,21 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
       * tiny line graphs with real batches -> dense semiring ``closure``
         (one fused device program, no per-root host traversal);
       * anything where HL-index construction is tractable -> ``hl-index``
-        (the paper's answer: microsecond merge-joins, batch via snapshot);
+        (the paper's answer: microsecond merge-joins, batch via
+        snapshot).  On a multi-device mesh the tractability ceiling
+        scales with the parallelism actually deliverable — the device
+        count capped by the host's cores: construction itself shards
+        across the mesh (``build_engine`` forwards the mesh, so
+        ``HLIndexEngine.build`` picks ``construction="sharded"`` and
+        ``build_sharded`` defaults a matching worker pool — see
+        ``repro.core.hlindex``), so larger graphs still label-build
+        instead of falling back to traversal backends.  Known limit of
+        the heuristic: shards stop at line-graph component boundaries,
+        so a single-component graph cannot actually parallelize — the
+        planner cannot see that without computing the neighbor index it
+        exists to avoid, so the scaled budget is optimistic there
+        (sub-component root-range sharding is the ROADMAP item that
+        closes this);
       * huge graphs, batched workload -> ``frontier`` (index-free sparse
         sweeps; build cost is one line-graph pass);
       * huge graphs, trickle queries -> ``online`` (no build at all).
@@ -351,8 +378,8 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
     q = int(batch_hint) if batch_hint else 0
     if h.m == 0:
         return "hl-index"
-    if (mesh is not None and mesh.devices.size > 1
-            and len(mesh.axis_names) >= 2):
+    devices = int(mesh.devices.size) if mesh is not None else 1
+    if devices > 1 and len(mesh.axis_names) >= 2:
         # sharded needs two mesh axes to 2-D block-shard over; a 1-D mesh
         # falls through to the single-device policy rather than routing
         # to a backend that cannot be built on it
@@ -362,8 +389,16 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
             return "sharded"
     if h.m <= 256 and q >= 64:
         return "closure"
-    # label mass proxy: construction walks ~nnz * avg-degree host work
-    if h.nnz * max(float(h.vertex_degrees.mean()) if h.n else 0.0, 1.0) <= 2e6:
+    # label mass proxy: construction walks ~nnz * avg-degree host work;
+    # sharded construction divides it across forked workers, so the
+    # budget scales with the parallelism actually deliverable — the
+    # mesh device count capped by the host's cores (build_engine
+    # forwards the mesh, and build_sharded defaults its worker pool to
+    # exactly this on a multi-device mesh)
+    parallel = min(devices, os.cpu_count() or 1) if devices > 1 else 1
+    label_budget = 2e6 * max(parallel, 1)
+    if h.nnz * max(float(h.vertex_degrees.mean()) if h.n else 0.0, 1.0) \
+            <= label_budget:
         return "hl-index"
     if q >= 256:
         return "frontier"
@@ -384,9 +419,10 @@ def build(h: Hypergraph, backend: str = "auto", *,
         (see ``plan_backend``) and forwarded to the ``sharded`` backend;
         ignored by single-device backends.
       **opts: backend-specific options, passed to the backend's
-        ``build`` (e.g. ``minimize_labels=False`` for "hl-index",
-        ``schedule="ring"`` for "sharded", ``device_budget_bytes`` for
-        the planner).
+        ``build`` (e.g. ``minimize_labels=False`` or
+        ``construction="sharded"`` for "hl-index", ``schedule="ring"``
+        or ``build_labels=True`` for "sharded", ``device_budget_bytes``
+        for the planner).
     """
     budget = opts.pop("device_budget_bytes", None)
     if backend == "auto":
@@ -398,14 +434,37 @@ def build(h: Hypergraph, backend: str = "auto", *,
         raise ValueError(
             f"unknown backend {backend!r}; available: {available_backends()}"
         ) from None
-    if mesh is not None and backend == "sharded":
+    if mesh is not None and backend in _MESH_AWARE_BACKENDS:
         opts.setdefault("mesh", mesh)
     return cls.build(h, **opts)
+
+
+# Backends whose ``build`` consumes a device mesh: "sharded" block-shards
+# its closure over it; the HL-index backends shard *construction* over it
+# (neighbor overlaps on device, per-device component shards).
+_MESH_AWARE_BACKENDS = frozenset({"sharded", "hl-index", "hl-index-basic"})
 
 
 # ---------------------------------------------------------------------------
 # HL-index backends (the paper's structure)
 # ---------------------------------------------------------------------------
+
+def _resolve_construction(construction: str, mesh, workers,
+                          num_shards) -> str:
+    """The one auto-resolution rule both HL-index backends share:
+    ``"auto"`` means sharded construction iff a multi-device mesh,
+    ``workers``, or ``num_shards`` asks for it; anything else must be a
+    ``CONSTRUCTION_MODES`` key."""
+    if construction == "auto":
+        return ("sharded"
+                if (workers or num_shards
+                    or (mesh is not None and int(mesh.devices.size) > 1))
+                else "serial")
+    if construction not in CONSTRUCTION_MODES:
+        raise ValueError(
+            f"unknown construction {construction!r}; available: "
+            f"{sorted(CONSTRUCTION_MODES)}")
+    return construction
 
 @register_backend("hl-index")
 class HLIndexEngine(_EngineBase):
@@ -423,25 +482,60 @@ class HLIndexEngine(_EngineBase):
                  minimizer: Optional[Callable[[HLIndex], HLIndex]] = None):
         super().__init__(h)
         self.idx = idx
+        self.construction = "serial"     # overwritten by ``build``
         self._builder = builder          # scoped-update (re)construction
         self._minimizer = minimizer      # applied to the sub-index too
         self._snap: Optional[DeviceSnapshot] = None
 
     @classmethod
     def build(cls, h: Hypergraph, *, minimize_labels: bool = True,
-              index: Optional[HLIndex] = None) -> "HLIndexEngine":
+              index: Optional[HLIndex] = None,
+              construction: str = "auto", mesh=None,
+              workers: Optional[int] = None,
+              num_shards: Optional[int] = None) -> "HLIndexEngine":
         """``index`` reuses a prebuilt (unminimized) HL-index instead of
         running construction again — e.g. to derive the minimized engine
-        from an ablation engine's labels."""
-        idx = index if index is not None else build_fast(h)
-        if minimize_labels:
-            idx = minimize(idx)
-        return cls(h, idx, minimizer=minimize if minimize_labels else None)
+        from an ablation engine's labels.
+
+        ``construction`` picks the builder from ``CONSTRUCTION_MODES``:
+        ``"serial"`` (Algorithm 3 on one host thread), ``"sharded"``
+        (component-sharded parallel construction — byte-identical labels,
+        see ``repro.core.hlindex.build_sharded``), or ``"auto"``
+        (sharded iff a multi-device ``mesh``, ``workers``, or
+        ``num_shards`` asks for it).  ``mesh`` additionally routes the
+        neighbor-overlap precompute onto the devices.  Scoped updates
+        keep using the same construction mode on the affected
+        component(s).
+        """
+        construction = _resolve_construction(construction, mesh, workers,
+                                             num_shards)
+        minimizer = minimize if minimize_labels else None
+        if construction == "sharded":
+            builder = functools.partial(build_sharded, workers=workers,
+                                        num_shards=num_shards)
+            if index is not None:
+                idx = minimizer(index) if minimizer else index
+            else:
+                # minimization runs inside the shards too (exact: dual
+                # sets are component-confined), so the whole build
+                # parallelizes — byte-identical to minimize(build_fast(h))
+                idx = build_sharded(h, minimizer=minimizer, workers=workers,
+                                    num_shards=num_shards, mesh=mesh)
+        else:
+            builder = build_fast
+            idx = index if index is not None else build_fast(h)
+            if minimizer is not None:
+                idx = minimizer(idx)
+        eng = cls(h, idx, builder=builder, minimizer=minimizer)
+        eng.construction = construction
+        return eng
 
     def mr(self, u: int, v: int) -> int:
+        self._check_vertex_ids(u, v)
         return mr_query(self.idx, int(u), int(v))
 
     def s_reach(self, u: int, v: int, s: int) -> bool:
+        self._check_vertex_ids(u, v)
         return s_reach_query(self.idx, int(u), int(v), int(s))
 
     def mr_batch(self, us, vs) -> np.ndarray:
@@ -509,10 +603,25 @@ class HLIndexBasicEngine(HLIndexEngine):
     name = "hl-index-basic"
 
     @classmethod
-    def build(cls, h: Hypergraph, *,
-              cover_check: bool = True) -> "HLIndexBasicEngine":
-        builder = functools.partial(build_basic, cover_check=cover_check)
-        return cls(h, builder(h), builder=builder)
+    def build(cls, h: Hypergraph, *, cover_check: bool = True,
+              construction: str = "auto", mesh=None,
+              workers: Optional[int] = None,
+              num_shards: Optional[int] = None) -> "HLIndexBasicEngine":
+        base = functools.partial(build_basic, cover_check=cover_check)
+        construction = _resolve_construction(construction, mesh, workers,
+                                             num_shards)
+        if construction == "sharded":
+            builder = functools.partial(build_sharded, base=base,
+                                        workers=workers,
+                                        num_shards=num_shards)
+            idx = build_sharded(h, base=base, workers=workers,
+                                num_shards=num_shards, mesh=mesh)
+        else:
+            builder = base
+            idx = base(h)
+        eng = cls(h, idx, builder=builder)
+        eng.construction = construction
+        return eng
 
 
 # ---------------------------------------------------------------------------
@@ -537,6 +646,7 @@ class OnlineEngine(_EngineBase):
         return cls(h, NeighborCache(h) if precompute else None)
 
     def mr(self, u: int, v: int) -> int:
+        self._check_vertex_ids(u, v)
         return mr_online(self.h, int(u), int(v), self.cache)
 
     def update(self, inserts=(), deletes=()) -> None:
@@ -613,6 +723,7 @@ class ETEEngine(_EngineBase):
         return cls(h, build_ete(h))
 
     def mr(self, u: int, v: int) -> int:
+        self._check_vertex_ids(u, v)
         return self.ete.mr(int(u), int(v))
 
     def mr_batch(self, us, vs) -> np.ndarray:
@@ -655,6 +766,7 @@ class ThresholdEngine(_EngineBase):
         return cls(h, ThresholdComponentIndex(h, cap=cap))
 
     def mr(self, u: int, v: int) -> int:
+        self._check_vertex_ids(u, v)
         return self.tci.mr(int(u), int(v))
 
     def nbytes(self) -> int:
@@ -677,6 +789,7 @@ class MSTOracleEngine(_EngineBase):
         return cls(h, MSTOracle(h))
 
     def mr(self, u: int, v: int) -> int:
+        self._check_vertex_ids(u, v)
         return self.oracle.mr(int(u), int(v))
 
 
@@ -714,6 +827,7 @@ class ClosureEngine(_EngineBase):
     def mr(self, u: int, v: int) -> int:
         # scalar lookups stay on the host matrix (no reason to build the
         # [n, m] snapshot for a trickle of queries)
+        self._check_vertex_ids(u, v)
         return int(vertex_mr_from_edge_mr(self.h, self.w_star,
                                           [int(u)], [int(v)])[0])
 

@@ -19,6 +19,8 @@ import numpy as np
 
 __all__ = [
     "Hypergraph",
+    "NeighborCSR",
+    "neighbor_csr",
     "from_edge_lists",
     "compact",
     "induced_subhypergraph",
@@ -138,6 +140,172 @@ class Hypergraph:
         return dict(n=self.n, m=self.m, nnz=self.nnz,
                     eta_avg=float(self.vertex_degrees.mean()) if self.n else 0.0,
                     eta_max=self.d_max, delta=self.delta)
+
+
+# ---------------------------------------------------------------------------
+# shared neighbor index (line-graph adjacency as one read-only CSR)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NeighborCSR:
+    """The full line-graph adjacency ``N(e)`` with overlap degrees, as one
+    read-only CSR — the shared neighbor index consumed by sharded HL-index
+    construction (``repro.core.hlindex.build_sharded``).
+
+    Per row the content is exactly ``Hypergraph.neighbors_od(e)``:
+    neighbor hyperedge ids ascending, overlap degrees aligned — so a
+    traversal reading rows from here is step-for-step identical to one
+    computing neighborhoods on the fly, just without the O(δ·d) Python
+    dict pass per hyperedge.
+    """
+
+    ptr: np.ndarray       # [m+1] int64 offsets
+    idx: np.ndarray       # [L]   int64 neighbor ids, ascending per row
+    od: np.ndarray        # [L]   int64 overlap degrees
+
+    @property
+    def m(self) -> int:
+        return int(self.ptr.size - 1)
+
+    def row(self, e: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``(neighbors, overlap_degrees)`` of hyperedge ``e`` — same
+        content and order as ``Hypergraph.neighbors_od(e)``."""
+        lo, hi = self.ptr[e], self.ptr[e + 1]
+        return self.idx[lo:hi], self.od[lo:hi]
+
+    def nbytes(self) -> int:
+        return int(self.ptr.nbytes + self.idx.nbytes + self.od.nbytes)
+
+    def components(self) -> np.ndarray:
+        """[m] int64 line-graph component label per hyperedge; labels are
+        assigned in ascending order of each component's smallest id, so
+        the labeling is deterministic.
+
+        Vectorized min-label propagation with pointer jumping (labels
+        always point at a smaller id inside the same component, so
+        ``l[l]`` is a legal shortcut): O(log diameter) rounds of pure
+        numpy over the CSR — this runs serially on the sharded build's
+        critical path before any parallelism starts, so no interpreted
+        per-entry loop."""
+        m = self.m
+        if m == 0:
+            return np.empty(0, np.int64)
+        rows = np.repeat(np.arange(m), np.diff(self.ptr))
+        labels = np.arange(m)
+        while True:
+            nb_min = np.full(m, m, np.int64)
+            np.minimum.at(nb_min, rows, labels[self.idx])
+            new = np.minimum(labels, nb_min)
+            new = np.minimum(new, new[new])          # pointer jumping
+            if np.array_equal(new, labels):
+                break
+            labels = new
+        # converged: labels[e] == smallest id in e's component; compact
+        # to 0..C-1 in ascending-smallest-id order
+        _, inv = np.unique(labels, return_inverse=True)
+        return inv.astype(np.int64)
+
+    def induced(self, edge_ids: np.ndarray) -> "NeighborCSR":
+        """The CSR restricted to ``edge_ids`` (sorted), with neighbor ids
+        remapped to local positions.  ``edge_ids`` must be neighbor-closed
+        (a union of whole line-graph components) — a neighbor outside the
+        set raises ``ValueError``, which is the cover-check reconciliation
+        guard of sharded construction: cover relations ride s-overlap
+        walks, i.e. line-graph paths, so closure here is exactly what
+        keeps per-shard MCD state equal to the serial builder's."""
+        ids = np.asarray(edge_ids, np.int64)
+        local = np.full(self.m, -1, np.int64)
+        local[ids] = np.arange(ids.size)
+        sizes = self.ptr[ids + 1] - self.ptr[ids]
+        total = int(sizes.sum())
+        ptr = np.zeros(ids.size + 1, np.int64)
+        np.cumsum(sizes, out=ptr[1:])
+        if total == 0:
+            return NeighborCSR(ptr, np.empty(0, np.int64),
+                               np.empty(0, np.int64))
+        take = (np.repeat(self.ptr[ids], sizes)
+                + np.arange(total) - np.repeat(ptr[:-1], sizes))
+        lidx = local[self.idx[take]]
+        if (lidx < 0).any():
+            bad = int(self.idx[take][lidx < 0][0])
+            raise ValueError(
+                f"edge_ids is not neighbor-closed: hyperedge {bad} is a "
+                f"line-graph neighbor of the set but not in it")
+        return NeighborCSR(ptr, lidx, self.od[take])
+
+
+def _mesh_overlap_matrix(h: Hypergraph, mesh) -> np.ndarray:
+    """Dense pairwise-overlap matrix |e_i ∩ e_j| computed on a device
+    mesh: incidence rows block-sharded over every mesh axis, one sharded
+    matmul, result pulled back for CSR extraction.  f32 products are
+    exact (overlaps ≤ δ ≪ 2^24)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    nd = int(mesh.devices.size)
+    b = h.to_incidence(np.float32)
+    pad = (-h.m) % nd
+    if pad:
+        b = np.pad(b, ((0, pad), (0, 0)))
+    spec = NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names), None))
+    bd = jax.device_put(b, spec)
+    w = jax.jit(lambda x: x @ x.T, out_shardings=spec)(bd)
+    return np.asarray(w).astype(np.int64)[:h.m, :h.m]
+
+
+def neighbor_csr(h: Hypergraph, *, mesh=None) -> NeighborCSR:
+    """All line-graph neighborhoods at once, as a shared ``NeighborCSR``.
+
+    Row content is byte-identical to ``h.neighbors_od(e)`` for every
+    ``e`` (asserted in tests) — this is the precomputed neighbor index
+    that lets HL-index construction drop its per-hyperedge O(δ·d) host
+    dict pass (``repro.core.hlindex``, Lemma 6 regime).
+
+    Two paths, same output:
+      * host (default): every ordered co-incidence pair ``(e1, e2)``
+        sharing a vertex is generated in one vectorized pass and
+        deduplicated with counts — O(Σ d_u²) memory, no dense [m, m].
+      * ``mesh`` with more than one device: the O(m²·n̄) overlap products
+        run on the mesh (incidence rows sharded over every axis, one
+        sharded matmul) and only the CSR extraction stays on host — the
+        device-resident route sharded construction uses.
+    """
+    m = h.m
+    empty = NeighborCSR(np.zeros(max(m, 0) + 1, np.int64),
+                        np.empty(0, np.int64), np.empty(0, np.int64))
+    if m == 0 or h.nnz == 0:
+        return empty
+    if mesh is not None and int(mesh.devices.size) > 1:
+        w = _mesh_overlap_matrix(h, mesh)
+        np.fill_diagonal(w, 0)
+        rows, cols = np.nonzero(w)            # row-major: ascending per row
+        od = w[rows, cols]
+        counts = np.bincount(rows, minlength=m)
+        ptr = np.zeros(m + 1, np.int64)
+        np.cumsum(counts, out=ptr[1:])
+        return NeighborCSR(ptr, cols.astype(np.int64), od.astype(np.int64))
+    deg = h.vertex_degrees
+    pair_counts = deg * deg
+    total = int(pair_counts.sum())
+    if total == 0:
+        return empty
+    # within vertex u's block of d² ordered pairs, entry k is
+    # (E(u)[k // d], E(u)[k % d]); all blocks emitted in one shot
+    starts = np.cumsum(pair_counts) - pair_counts
+    pos = np.arange(total) - np.repeat(starts, pair_counts)
+    du = np.repeat(deg, pair_counts)
+    vstart = np.repeat(h.v_ptr[:-1], pair_counts)
+    a = h.v_idx[vstart + pos // du]
+    b = h.v_idx[vstart + pos % du]
+    mask = a != b
+    key = a[mask] * np.int64(m) + b[mask]
+    uniq, counts = np.unique(key, return_counts=True)
+    rows = uniq // m
+    cols = uniq % m
+    row_counts = np.bincount(rows, minlength=m)
+    ptr = np.zeros(m + 1, np.int64)
+    np.cumsum(row_counts, out=ptr[1:])
+    return NeighborCSR(ptr, cols.astype(np.int64), counts.astype(np.int64))
 
 
 # ---------------------------------------------------------------------------

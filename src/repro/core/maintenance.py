@@ -36,6 +36,17 @@ the scope, so an update that changes vertex degrees can in principle
 reorder *other* components' hyperedges; we keep the original order for
 untouched components (any total order yields a correct index — order
 only affects minimality).
+
+``builder`` is any callable producing an ``HLIndex`` for the scope's
+sub-hypergraph — ``build_fast`` (default), ``build_basic``, or the
+component-sharded ``build_sharded`` (``repro.core.hlindex``), whose
+output is byte-identical to ``build_fast`` so the splice composes with
+shard-built indexes unchanged: ``splice_rank`` consumes the sub-index's
+rank array as an opaque order (sharded construction reproduces the
+serial one exactly), and the spliced label arrays are the sub-index's
+own.  The engine layer wires this up via
+``build_engine(h, "hl-index", construction="sharded")`` — updates then
+reconstruct the affected component(s) with the same sharded builder.
 """
 from __future__ import annotations
 
@@ -109,6 +120,11 @@ def _splice(new_h: Hypergraph, old_idx: HLIndex, old_to_new: np.ndarray,
         if minimizer is not None:
             sub_idx = minimizer(sub_idx)
         sub_rank = sub_idx.rank
+        if sub_rank.shape[0] != sub_h.m:
+            raise ValueError(
+                f"builder returned an index over {sub_rank.shape[0]} "
+                f"hyperedges for a scope of {sub_h.m} — the splice needs "
+                f"one rank key per in-scope hyperedge")
     else:
         sub_h, sub_verts = None, np.empty(0, np.int64)
         sub_idx, sub_rank = None, np.empty(0, np.int64)

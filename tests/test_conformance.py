@@ -1,0 +1,251 @@
+"""Cross-backend conformance matrix.
+
+One parameterized matrix replaces the ad-hoc per-file equivalence checks
+that used to live in test_engine.py / test_query_engines.py /
+test_serving.py: every registered backend (plus the non-default build
+configurations of the sharded-construction paths) × every engine
+operation — ``mr``, ``s_reach``, ``mr_batch``, ``s_reach_batch``,
+``snapshot``, ``update`` — is validated against the independent
+``mst-oracle`` reference on every graph in the suite.
+
+Capability flags are **asserted, never silently skipped**: a backend
+with no snapshot form must raise ``SnapshotUnsupported`` (and one with
+no update path ``UpdateUnsupported``) exactly where the pinned tables
+below say so.  Registry drift — a new backend, or a capability change —
+fails the matrix until the expectations here are updated consciously.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (available_backends, build_engine, serve,
+                       update_capabilities, random_hypergraph,
+                       planted_chain_hypergraph, from_edge_lists)
+from repro.core import MSTOracle, PaddedIndex, apply_edge_edits, build_fast, \
+    minimize
+from repro.core.engine import SnapshotUnsupported, UpdateUnsupported
+from repro.serve.reach_service import MRRequest, SReachRequest
+
+BACKENDS = available_backends()
+
+# ---------------------------------------------------------------------------
+# pinned capability expectations — the registry must match these exactly
+# ---------------------------------------------------------------------------
+
+EXPECTED_SNAPSHOT = {
+    "hl-index": True, "hl-index-basic": True, "ete": True,
+    "closure": True, "sharded": True,
+    "online": False, "frontier": False, "threshold": False,
+    "mst-oracle": False,
+}
+EXPECTED_UPDATE = {
+    "hl-index": "scoped", "hl-index-basic": "scoped",
+    "online": "incremental", "frontier": "incremental",
+    "closure": "rebuild", "sharded": "rebuild",
+    "ete": "unsupported", "threshold": "unsupported",
+    "mst-oracle": "unsupported",
+}
+
+# matrix rows: every registered backend under default options, plus the
+# non-default construction paths (sharded label construction; the
+# sharded backend's label regime) — same conformance bar for all
+CONFIGS = {name: (name, {}) for name in BACKENDS}
+CONFIGS["hl-index[sharded-build]"] = (
+    "hl-index", dict(construction="sharded", num_shards=3))
+CONFIGS["sharded[labels]"] = ("sharded", dict(build_labels=True))
+CONFIG_NAMES = sorted(CONFIGS)
+
+GRAPHS = {
+    "random": lambda: random_hypergraph(30, 45, seed=3),
+    "chain": lambda: planted_chain_hypergraph(2, 6, overlap=2,
+                                              extra_size=2, seed=0),
+    "isolated": lambda: from_edge_lists([[0, 1, 2], [2, 3], [5, 6, 7],
+                                         [6, 7, 8]], n=12),
+}
+
+
+def test_matrix_covers_registry_exactly():
+    # the pinned tables and the live registry must agree both ways — a
+    # backend registered without a row here (or vice versa) is loud
+    assert set(EXPECTED_SNAPSHOT) == set(BACKENDS)
+    assert set(EXPECTED_UPDATE) == set(BACKENDS)
+    assert update_capabilities() == EXPECTED_UPDATE
+    assert "vtv" not in BACKENDS          # unsound for MR (paper Example 5)
+
+
+@pytest.fixture(scope="module", params=sorted(GRAPHS))
+def case(request):
+    h = GRAPHS[request.param]()
+    rng = np.random.default_rng(7)
+    us = rng.integers(0, h.n, 60)
+    vs = rng.integers(0, h.n, 60)
+    oracle = MSTOracle(h)
+    want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)],
+                    np.int64)
+    return request.param, h, us, vs, want
+
+
+_ENGINES = {}
+
+
+def _engine(graph_name, h, config):
+    """One engine per (graph, config), shared by the read-only ops."""
+    key = (graph_name, config)
+    if key not in _ENGINES:
+        backend, opts = CONFIGS[config]
+        _ENGINES[key] = build_engine(h, backend, **opts)
+    return _ENGINES[key]
+
+
+# ---------------------------------------------------------------------------
+# the matrix: config × operation, answers pinned to mst-oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_mr(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    assert eng.name == CONFIGS[config][0]
+    for u, v, w in zip(us[:20], vs[:20], want[:20]):
+        assert eng.mr(int(u), int(v)) == int(w)
+    # scalar paths reject out-of-range ids like the batch paths — a
+    # Python negative index must never silently answer from another row
+    with pytest.raises(IndexError):
+        eng.mr(-1, 0)
+    with pytest.raises(IndexError):
+        eng.mr(0, h.n)
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_s_reach(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    for s in (1, 2, 3):
+        for u, v, w in zip(us[:10], vs[:10], want[:10]):
+            assert eng.s_reach(int(u), int(v), s) == (int(w) >= s)
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_mr_batch(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    got = np.asarray(eng.mr_batch(us, vs)).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+    assert len(eng.mr_batch([], [])) == 0     # empty batches legal
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_s_reach_batch(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    for s in (1, 2, 3):
+        got = np.asarray(eng.s_reach_batch(us, vs, s))
+        np.testing.assert_array_equal(got, want >= s)
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_snapshot(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    backend = CONFIGS[config][0]
+    if not EXPECTED_SNAPSHOT[backend]:
+        # capability asserted, not skipped: the declared-unsupported
+        # backends must raise, and must keep raising (not silently grow
+        # a half-working snapshot path)
+        with pytest.raises(SnapshotUnsupported):
+            eng.snapshot()
+        return
+    snap = eng.snapshot()
+    got = np.asarray(snap.mr(us, vs)).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(snap.s_reach(us, vs, 2)),
+                                  want >= 2)
+    assert snap.backend == backend
+    assert snap.version == eng.version
+    assert snap.nbytes() > 0 or h.m == 0
+    assert eng.snapshot() is snap             # cached while un-updated
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_update(case, config):
+    name, h, us, vs, want = case
+    backend, opts = CONFIGS[config]
+    eng = build_engine(h, backend, **opts)    # fresh: update mutates
+    assert eng.version == 0
+    if EXPECTED_UPDATE[backend] == "unsupported":
+        with pytest.raises(UpdateUnsupported):
+            eng.update(inserts=[[0, 1]])
+        assert eng.version == 0               # refused == untouched
+        return
+    ins, dels = [[0, 1, h.n - 1]], ([2] if h.m > 2 else [])
+    eng.update(inserts=ins, deletes=dels)
+    assert eng.version == 1
+    h2, _, _ = apply_edge_edits(h, ins, dels)
+    oracle = MSTOracle(h2)
+    rng = np.random.default_rng(1)
+    us2 = rng.integers(0, h2.n, 40)
+    vs2 = rng.integers(0, h2.n, 40)
+    want2 = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us2, vs2)],
+                     np.int64)
+    got = np.asarray(eng.mr_batch(us2, vs2)).astype(np.int64)
+    np.testing.assert_array_equal(got, want2)
+    for u, v, w in zip(us2[:8], vs2[:8], want2[:8]):
+        assert eng.mr(int(u), int(v)) == int(w)
+        assert eng.s_reach(int(u), int(v), 2) == (int(w) >= 2)
+
+
+# ---------------------------------------------------------------------------
+# serving layer rides the same matrix: service answers == oracle on every
+# backend (moved here from test_serving.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_service_matches_oracle(config):
+    backend, opts = CONFIGS[config]
+    h = random_hypergraph(30, 45, seed=3)
+    svc = serve(h, backend, start=False, **opts)
+    oracle = MSTOracle(h)
+    rng = np.random.default_rng(7)
+    reqs, want = [], []
+    for _ in range(80):
+        u, v = int(rng.integers(h.n)), int(rng.integers(h.n))
+        mr = oracle.mr(u, v)
+        if rng.random() < 0.5:
+            reqs.append(MRRequest(u, v))
+            want.append(mr)
+        else:
+            s = int(rng.integers(1, 5))
+            reqs.append(SReachRequest(u, v, s))
+            want.append(mr >= s)
+    futs = svc.submit_many(reqs)
+    assert svc.pending() == 80
+    svc.drain()
+    assert svc.pending() == 0
+    for req, fut, w in zip(reqs, futs, want):
+        got = fut.result(timeout=0)
+        assert got == w, (req, got, w)
+        assert isinstance(got, int if req.kind == "mr" else bool)
+
+
+# ---------------------------------------------------------------------------
+# back-compat padded form (moved here from test_query_engines.py): the
+# PaddedIndex constructor serves the same answers as the engine snapshot
+# ---------------------------------------------------------------------------
+
+def test_padded_index_backcompat_matches_oracle():
+    h = random_hypergraph(40, 60, seed=9)
+    idx = minimize(build_fast(h))
+    pidx = PaddedIndex(idx)
+    oracle = MSTOracle(h)
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, h.n, 200)
+    vs = rng.integers(0, h.n, 200)
+    want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)],
+                    np.int64)
+    np.testing.assert_array_equal(np.asarray(pidx.mr(us, vs)).astype(np.int64),
+                                  want)
+    for s in (1, 2, 3):
+        np.testing.assert_array_equal(np.asarray(pidx.s_reach(us, vs, s)),
+                                      want >= s)
+    snap = build_engine(h, "hl-index").snapshot()
+    np.testing.assert_array_equal(np.asarray(pidx.mr(us, vs)),
+                                  np.asarray(snap.mr(us, vs)))

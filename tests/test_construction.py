@@ -1,0 +1,400 @@
+"""Sharded HL-index construction: byte-identity to the serial builders
+(the tentpole contract), the shared neighbor index, the paper's stats
+invariants (Lemma 6), and the maintenance splice over shard-built
+indexes.  The 1/2/4-device mesh sweep runs in subprocesses (the host
+device count must be forced before jax initializes); the 4-device CI
+job additionally runs everything here on a real 2×2 mesh.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import (CONSTRUCTION_MODES, MSTOracle, apply_edge_edits,
+                        apply_updates, build_basic, build_fast,
+                        build_sharded, from_edge_lists, minimize,
+                        mr_query, neighbor_csr, paper_figure1,
+                        planted_chain_hypergraph, random_hypergraph)
+from repro.api import build_engine
+
+GRAPHS = {
+    "fig1": paper_figure1,
+    "random": lambda: random_hypergraph(30, 45, seed=3),
+    "dense": lambda: random_hypergraph(50, 80, seed=7),
+    "chain": lambda: planted_chain_hypergraph(4, 8, overlap=2,
+                                              extra_size=2, seed=1),
+    "isolated": lambda: from_edge_lists([[0, 1, 2], [2, 3], [5, 6, 7],
+                                         [6, 7, 8]], n=12),
+    "empty": lambda: from_edge_lists([], n=5),
+}
+
+
+def assert_index_identical(a, b, what=""):
+    """Byte-for-byte equality of every array field of two HLIndexes."""
+    assert np.array_equal(a.rank, b.rank) and a.rank.dtype == b.rank.dtype, what
+    assert np.array_equal(a.perm, b.perm), what
+    for fa, fb, name in ((a.labels_edge, b.labels_edge, "labels_edge"),
+                         (a.labels_rank, b.labels_rank, "labels_rank"),
+                         (a.labels_s, b.labels_s, "labels_s"),
+                         (a.dual_u, b.dual_u, "dual_u"),
+                         (a.dual_s, b.dual_s, "dual_s")):
+        assert len(fa) == len(fb), (what, name)
+        for i, (x, y) in enumerate(zip(fa, fb)):
+            assert x.dtype == y.dtype and x.tobytes() == y.tobytes(), \
+                (what, name, i, x, y)
+
+
+# ---------------------------------------------------------------------------
+# the shared neighbor index
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_neighbor_csr_matches_neighbors_od(graph):
+    h = GRAPHS[graph]()
+    nbr = neighbor_csr(h)
+    assert nbr.m == h.m
+    for e in range(h.m):
+        nb, od = h.neighbors_od(e)
+        nb2, od2 = nbr.row(e)
+        np.testing.assert_array_equal(nb, nb2)
+        np.testing.assert_array_equal(od, od2)
+
+
+def test_neighbor_csr_induced_requires_closure():
+    # the cover-check reconciliation guard: a scope that is not a union
+    # of whole line-graph components must be rejected, not merged
+    h = planted_chain_hypergraph(2, 4, overlap=2, extra_size=2, seed=0)
+    nbr = neighbor_csr(h)
+    comp = nbr.components()
+    whole = np.nonzero(comp == comp[0])[0]
+    sub = nbr.induced(whole)                       # whole component: fine
+    assert sub.m == whole.size
+    with pytest.raises(ValueError, match="neighbor-closed"):
+        nbr.induced(whole[:-1])                    # split component: loud
+
+
+def test_neighbor_csr_components_deterministic():
+    h = from_edge_lists([[0, 1, 2], [2, 3], [5, 6, 7], [6, 7, 8]], n=12)
+    comp = neighbor_csr(h).components()
+    np.testing.assert_array_equal(comp, [0, 0, 1, 1])
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: the tentpole contract, across shard counts that do not
+# divide evenly and through the forked worker pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 5])
+def test_shard_built_byte_identical_to_build_fast(graph, num_shards):
+    h = GRAPHS[graph]()
+    serial = build_fast(h)
+    sharded = build_sharded(h, num_shards=num_shards)
+    assert_index_identical(serial, sharded, (graph, num_shards))
+    assert sharded.stats["construction"] == "sharded"
+
+
+@pytest.mark.parametrize("graph", ["chain", "isolated"])
+def test_shard_built_byte_identical_through_worker_pool(graph):
+    h = GRAPHS[graph]()
+    serial = build_fast(h)
+    sharded = build_sharded(h, num_shards=2, workers=2)
+    assert_index_identical(serial, sharded, graph)
+
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_shard_built_minimized_and_basic_variants(graph):
+    h = GRAPHS[graph]()
+    # per-shard minimization == global minimization (Algorithm 4's dual
+    # sets are component-confined), for both base builders
+    assert_index_identical(minimize(build_fast(h)),
+                           build_sharded(h, minimizer=minimize,
+                                         num_shards=3), (graph, "fast-min"))
+    assert_index_identical(minimize(build_basic(h)),
+                           build_sharded(h, base=build_basic,
+                                         minimizer=minimize, num_shards=2),
+                           (graph, "basic-min"))
+
+
+def test_precomputed_neighbors_identity():
+    h = random_hypergraph(30, 45, seed=3)
+    nbr = neighbor_csr(h)
+    assert_index_identical(build_fast(h), build_fast(h, neighbors=nbr))
+    assert_index_identical(build_basic(h), build_basic(h, neighbors=nbr))
+    # a shared CSR handed to build_sharded is sliced, never recomputed
+    assert_index_identical(build_fast(h),
+                           build_sharded(h, num_shards=4, neighbors=nbr))
+
+
+def test_construction_modes_registry():
+    assert set(CONSTRUCTION_MODES) == {"serial", "sharded"}
+    assert CONSTRUCTION_MODES["serial"] is build_fast
+    assert CONSTRUCTION_MODES["sharded"] is build_sharded
+    h = random_hypergraph(10, 8, seed=0)
+    with pytest.raises(ValueError, match="unknown construction"):
+        build_engine(h, "hl-index", construction="no-such-mode")
+
+
+def test_engine_construction_modes_byte_identical():
+    h = random_hypergraph(30, 45, seed=3)
+    serial = build_engine(h, "hl-index", construction="serial")
+    sharded = build_engine(h, "hl-index", construction="sharded",
+                           num_shards=3)
+    assert serial.construction == "serial"
+    assert sharded.construction == "sharded"
+    assert_index_identical(serial.idx, sharded.idx)
+    # same for the unminimized ablation pair
+    serial_b = build_engine(h, "hl-index-basic")
+    sharded_b = build_engine(h, "hl-index-basic", construction="sharded",
+                             num_shards=2)
+    assert_index_identical(serial_b.idx, sharded_b.idx)
+
+
+# ---------------------------------------------------------------------------
+# stats regression: the paper's pruning invariants, pinned for both
+# builders so a pruning regression fails loudly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph", ["fig1", "random", "dense", "chain"])
+def test_stats_invariants_serial(graph):
+    h = GRAPHS[graph]()
+    fast = build_fast(h)
+    # Lemma 6: N(e) is computed exactly once per hyperedge, ever
+    assert 0 < fast.stats["neighbor_inits"] <= h.m
+    # Algorithm 3 never runs an online cover check — MCD replaces it
+    assert fast.stats["cover_checks"] == 0
+    # the neighbor index never holds more than the full adjacency, and
+    # eviction (lines 22-24) only shrinks it
+    total_adjacency = int(np.diff(neighbor_csr(h).ptr).sum())
+    assert fast.stats["m_total_inserts"] <= total_adjacency
+    assert fast.stats["m_final_entries"] <= fast.stats["m_peak_entries"] \
+        <= fast.stats["m_total_inserts"]
+    basic = build_basic(h)
+    # Algorithm 2 runs exactly one cover check per non-stale pop
+    assert basic.stats["cover_checks"] == basic.stats["pops"]
+    # both produce one label per (root, newly-covered vertex): counts agree
+    assert fast.num_labels == basic.num_labels
+
+
+@pytest.mark.parametrize("graph", ["fig1", "random", "dense", "chain"])
+def test_stats_invariants_sharded(graph):
+    h = GRAPHS[graph]()
+    serial = build_fast(h)
+    sharded = build_sharded(h, num_shards=3)
+    # per-shard traversal counters sum to exactly the serial values —
+    # sharding must not change how much pruned work happens, only where
+    for key in ("pops", "pushes", "neighbor_inits", "m_total_inserts",
+                "cover_checks", "m_final_entries"):
+        assert float(sharded.stats[key]) == float(serial.stats[key]), key
+    assert 0 < sharded.stats["neighbor_inits"] <= h.m
+    # the sharded peak is per-shard, so it never exceeds the serial peak
+    # (which interleaves components in rank order)
+    assert sharded.stats["m_peak_entries"] <= serial.stats["m_peak_entries"]
+    basic_sharded = build_sharded(h, base=build_basic, num_shards=2)
+    basic = build_basic(h)
+    assert float(basic_sharded.stats["cover_checks"]) \
+        == float(basic.stats["cover_checks"]) == float(basic.stats["pops"])
+
+
+# ---------------------------------------------------------------------------
+# maintenance: the scoped splice composes with shard-built sub-indexes
+# ---------------------------------------------------------------------------
+
+def test_splice_accepts_shard_built_indexes():
+    h = planted_chain_hypergraph(4, 6, overlap=2, extra_size=2, seed=2)
+    idx_serial = build_fast(h)
+    idx_sharded = build_sharded(h, num_shards=2)
+    ins, dels = [[0, 1, h.n]], [1]
+    h_a, idx_a, rep_a = apply_updates(h, idx_serial, ins, dels)
+    h_b, idx_b, rep_b = apply_updates(
+        h, idx_sharded, ins, dels,
+        builder=functools.partial(build_sharded, num_shards=2))
+    assert not rep_a.full_rebuild and not rep_b.full_rebuild
+    np.testing.assert_array_equal(rep_a.refreshed_vertices,
+                                  rep_b.refreshed_vertices)
+    assert_index_identical(idx_a, idx_b)
+    oracle = MSTOracle(h_a)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        u, v = int(rng.integers(h_a.n)), int(rng.integers(h_a.n))
+        assert mr_query(idx_b, u, v) == oracle.mr(u, v)
+
+
+def test_engine_update_sequences_identical_across_constructions():
+    rng = np.random.default_rng(5)
+    h = planted_chain_hypergraph(3, 5, overlap=2, extra_size=2, seed=3)
+    serial = build_engine(h, "hl-index", construction="serial")
+    sharded = build_engine(h, "hl-index", construction="sharded",
+                           num_shards=2)
+    for step in range(4):
+        ins = [list(rng.choice(h.n + 1, size=3, replace=False))]
+        dels = [int(rng.integers(h.m))] if (step % 2 and h.m > 1) else []
+        serial.update(inserts=ins, deletes=dels)
+        sharded.update(inserts=ins, deletes=dels)
+        h, _, _ = apply_edge_edits(h, ins, dels)
+        assert_index_identical(serial.idx, sharded.idx, step)
+        us, vs = rng.integers(0, h.n, 20), rng.integers(0, h.n, 20)
+        np.testing.assert_array_equal(
+            np.asarray(serial.mr_batch(us, vs)),
+            np.asarray(sharded.mr_batch(us, vs)))
+
+
+# ---------------------------------------------------------------------------
+# device meshes: 1/2/4-device sweeps in subprocesses (forced host device
+# counts), asserting byte-identity of the mesh-computed neighbor index
+# and the engine paths that consume it
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_sharded_construction_on_host_mesh(n_devices):
+    from util_subproc import run_with_devices
+    out = run_with_devices("""
+import numpy as np
+from repro.core import (MSTOracle, build_fast, build_sharded, minimize,
+                        neighbor_csr, random_hypergraph)
+from repro.core.distributed import default_line_graph_mesh
+from repro.api import build_engine
+
+h = random_hypergraph(40, 30, seed=5)
+mesh = default_line_graph_mesh()
+assert mesh.devices.size == %(nd)d, mesh
+
+# the mesh-computed neighbor index equals the host one, row for row
+host = neighbor_csr(h)
+dev = neighbor_csr(h, mesh=mesh)
+assert np.array_equal(host.ptr, dev.ptr)
+assert np.array_equal(host.idx, dev.idx)
+assert np.array_equal(host.od, dev.od)
+
+# shard-built labels are byte-identical to build_fast on this mesh, for
+# even and uneven shard counts, with and without the worker pool, and
+# (on a multi-device mesh) with the overlap precompute forced onto the
+# devices; forcing it without devices to offload to is a loud error
+multi = mesh.devices.size > 1
+if not multi:
+    try:
+        build_sharded(h, mesh=mesh, device_overlaps=True)
+        raise AssertionError("device_overlaps=True on 1 device must raise")
+    except ValueError:
+        pass
+serial = build_fast(h)
+for num_shards, workers, dev in ((1, None, False), (3, None, multi or None),
+                                 (3, 2, None), (%(nd)d, 2, multi or False)):
+    sh = build_sharded(h, mesh=mesh, num_shards=num_shards,
+                       workers=workers, device_overlaps=dev)
+    assert np.array_equal(sh.rank, serial.rank)
+    for u in range(h.n):
+        assert sh.labels_rank[u].tobytes() == serial.labels_rank[u].tobytes()
+        assert sh.labels_s[u].tobytes() == serial.labels_s[u].tobytes()
+        assert sh.labels_edge[u].tobytes() == serial.labels_edge[u].tobytes()
+
+# a multi-device mesh flips hl-index construction to sharded via auto
+eng = build_engine(h, "hl-index", mesh=mesh)
+want_mode = "sharded" if mesh.devices.size > 1 else "serial"
+assert eng.construction == want_mode, eng.construction
+
+# the sharded backend's label regime answers == mst-oracle on this mesh
+oracle = MSTOracle(h)
+rng = np.random.default_rng(1)
+us, vs = rng.integers(0, h.n, 50), rng.integers(0, h.n, 50)
+want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)], np.int64)
+for eng in (build_engine(h, "hl-index", mesh=mesh),
+            build_engine(h, "sharded", mesh=mesh, build_labels=True)):
+    got = np.asarray(eng.mr_batch(us, vs)).astype(np.int64)
+    assert np.array_equal(got, want)
+    eng.update(inserts=[[0, 1, 2]], deletes=[3])
+
+print("OK")
+""" % {"nd": n_devices}, n_devices=n_devices)
+    assert "OK" in out
+
+
+def test_label_regime_scalars_validate_vertex_ids():
+    # the sharded backend's label regime short-circuits scalars to the
+    # host merge-join; it must reject out-of-range ids exactly like the
+    # closure regime's batch-validated path (a Python negative index
+    # would silently answer from the wrong row)
+    h = random_hypergraph(20, 15, seed=4)
+    eng = build_engine(h, "sharded", build_labels=True)
+    with pytest.raises(IndexError, match="out of range"):
+        eng.mr(-1, 3)
+    with pytest.raises(IndexError, match="out of range"):
+        eng.mr(0, h.n)
+    with pytest.raises(IndexError, match="out of range"):
+        eng.s_reach(-1, 3, 2)
+    assert isinstance(eng.mr(0, 1), int)           # in-range still answers
+
+
+def test_device_overlaps_forced_without_devices_raises():
+    h = random_hypergraph(10, 8, seed=0)
+    with pytest.raises(ValueError, match="multi-device mesh"):
+        build_sharded(h, device_overlaps=True)
+
+
+def test_pool_fallback_stat_recorded():
+    h = planted_chain_hypergraph(4, 6, overlap=2, extra_size=2, seed=2)
+    sh = build_sharded(h, num_shards=2, workers=2)
+    assert sh.stats["pool_fallback"] == 0.0        # healthy pool run
+    assert build_sharded(h, num_shards=2).stats["pool_fallback"] == 0.0
+
+
+def test_unit_mesh_neighbor_csr_stays_on_host_path():
+    # a unit mesh must not detour through the device matmul — and either
+    # way the CSR is identical
+    from repro.api import make_mesh
+    h = random_hypergraph(25, 20, seed=9)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    host = neighbor_csr(h)
+    via_mesh = neighbor_csr(h, mesh=mesh)
+    np.testing.assert_array_equal(host.idx, via_mesh.idx)
+    np.testing.assert_array_equal(host.od, via_mesh.od)
+    assert_index_identical(build_fast(h),
+                           build_sharded(h, mesh=mesh, num_shards=2))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: random hypergraphs × uneven shard counts
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def hypergraphs(draw, max_v=16, max_e=12):
+        n = draw(st.integers(3, max_v))
+        m = draw(st.integers(1, max_e))
+        edges = []
+        for _ in range(m):
+            size = draw(st.integers(1, min(6, n)))
+            edge = draw(st.lists(st.integers(0, n - 1), min_size=size,
+                                 max_size=size, unique=True))
+            edges.append(edge)
+        return from_edge_lists(edges, n=n)
+
+    @settings(max_examples=20, deadline=None)
+    @given(hypergraphs(), st.integers(1, 7))
+    def test_property_shard_built_byte_identical(h, num_shards):
+        serial = build_fast(h)
+        sharded = build_sharded(h, num_shards=num_shards)
+        assert_index_identical(serial, sharded)
+        assert_index_identical(
+            minimize(build_basic(h)),
+            build_sharded(h, base=build_basic, minimizer=minimize,
+                          num_shards=num_shards))
+
+    @settings(max_examples=10, deadline=None)
+    @given(hypergraphs(max_v=14, max_e=10), st.integers(2, 5))
+    def test_property_shard_built_queries_match_oracle(h, num_shards):
+        idx = build_sharded(h, minimizer=minimize, num_shards=num_shards)
+        oracle = MSTOracle(h)
+        for u in range(h.n):
+            for v in range(h.n):
+                assert mr_query(idx, u, v) == oracle.mr(u, v)
+else:                                                 # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_shard_built_byte_identical():
+        pass

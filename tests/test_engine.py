@@ -1,76 +1,23 @@
-"""Unified ReachabilityEngine API: cross-validation of every registered
-backend against the independent MSTOracle, snapshot equivalence, the auto
-planner, the vectorized as_padded export, and the deprecated-alias shims.
+"""Unified ReachabilityEngine API: the auto planner, the engine.update
+sequencing contracts, snapshot invalidation, the vectorized as_padded
+export, the sharded backend's mesh handling, and the deprecated-alias
+shims.
 
-The known-incorrect ``vtv`` path (paper Example 5) deliberately stays out
-of the registry, so "every registered backend" is also a soundness claim.
+The per-backend × per-operation oracle equivalence matrix (every
+registered backend, capability flags asserted) lives in
+tests/test_conformance.py — this file keeps only the behaviors that are
+not a (backend, operation) matrix cell.
 """
 import numpy as np
 import pytest
 
 from repro.api import (build_engine, available_backends, plan_backend,
-                       update_capabilities, UpdateUnsupported,
-                       random_hypergraph, planted_chain_hypergraph,
+                       update_capabilities, random_hypergraph,
                        from_edge_lists)
 from repro.core import MSTOracle, apply_edge_edits, build_fast, minimize
 from repro.core.engine import SnapshotUnsupported
 
-GRAPHS = {
-    "random": lambda: random_hypergraph(30, 45, seed=3),
-    "chain": lambda: planted_chain_hypergraph(2, 6, overlap=2,
-                                              extra_size=2, seed=0),
-    "isolated": lambda: from_edge_lists([[0, 1, 2], [2, 3], [5, 6, 7],
-                                         [6, 7, 8]], n=12),
-}
 BACKENDS = available_backends()
-
-
-@pytest.fixture(scope="module", params=sorted(GRAPHS))
-def case(request):
-    h = GRAPHS[request.param]()
-    rng = np.random.default_rng(7)
-    us = rng.integers(0, h.n, 60)
-    vs = rng.integers(0, h.n, 60)
-    oracle = MSTOracle(h)
-    want = np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)],
-                    np.int64)
-    return h, us, vs, want
-
-
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_backend_matches_mst_oracle(case, backend):
-    h, us, vs, want = case
-    eng = build_engine(h, backend)
-    assert eng.name == backend
-
-    got = np.asarray(eng.mr_batch(us, vs)).astype(np.int64)
-    np.testing.assert_array_equal(got, want)
-
-    # scalar path agrees with batch path
-    for u, v, w in zip(us[:15], vs[:15], want[:15]):
-        assert eng.mr(int(u), int(v)) == int(w)
-
-    for s in (1, 2, 3):
-        sr = np.asarray(eng.s_reach_batch(us, vs, s))
-        np.testing.assert_array_equal(sr, want >= s)
-        for u, v, w in zip(us[:10], vs[:10], want[:10]):
-            assert eng.s_reach(int(u), int(v), s) == (int(w) >= s)
-
-
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_snapshot_serves_same_answers(case, backend):
-    h, us, vs, want = case
-    eng = build_engine(h, backend)
-    try:
-        snap = eng.snapshot()
-    except SnapshotUnsupported:
-        pytest.skip(f"{backend} has no padded device form")
-    got = np.asarray(snap.mr(us, vs)).astype(np.int64)
-    np.testing.assert_array_equal(got, want)
-    np.testing.assert_array_equal(np.asarray(snap.s_reach(us, vs, 2)),
-                                  want >= 2)
-    assert snap.backend == backend
-    assert snap.nbytes() > 0 or h.m == 0
 
 
 def test_auto_planner_picks_registered_backend():
@@ -95,13 +42,9 @@ def test_auto_engine_matches_oracle():
         np.asarray(eng.mr_batch(us, vs)).astype(np.int64), want)
 
 
-def test_vtv_not_registered():
-    assert "vtv" not in BACKENDS          # unsound for MR (paper Example 5)
-
-
 # ---------------------------------------------------------------------------
-# engine.update: capability contract, answer equivalence with a fresh
-# rebuild on every step, snapshot invalidation
+# engine.update: multi-step sequencing vs fresh rebuilds, snapshot
+# invalidation (the single-step capability contract is a conformance cell)
 # ---------------------------------------------------------------------------
 
 CAPS = update_capabilities()
@@ -112,42 +55,6 @@ def _oracle_answers(h, us, vs):
     oracle = MSTOracle(h)
     return np.array([oracle.mr(int(u), int(v)) for u, v in zip(us, vs)],
                     np.int64)
-
-
-def test_every_backend_declares_a_capability():
-    assert set(CAPS) == set(BACKENDS)
-    assert set(CAPS.values()) <= {"scoped", "incremental", "rebuild",
-                                  "unsupported"}
-    # the paper's structure absorbs updates scoped; the serving caches
-    # patch incrementally — pin these so a regression to "rebuild" or
-    # "unsupported" is loud
-    assert CAPS["hl-index"] == "scoped"
-    assert CAPS["hl-index-basic"] == "scoped"
-    assert CAPS["online"] == "incremental"
-    assert CAPS["frontier"] == "incremental"
-
-
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_update_contract(backend):
-    h = random_hypergraph(20, 15, seed=4)
-    eng = build_engine(h, backend)
-    assert eng.version == 0
-    if CAPS[backend] == "unsupported":
-        with pytest.raises(UpdateUnsupported):
-            eng.update(inserts=[[0, 1]])
-        assert eng.version == 0
-        return
-    eng.update(inserts=[[0, 1, 19]], deletes=[2])
-    assert eng.version == 1
-    h2, _, _ = apply_edge_edits(h, [[0, 1, 19]], [2])
-    rng = np.random.default_rng(0)
-    us, vs = rng.integers(0, h2.n, 40), rng.integers(0, h2.n, 40)
-    want = _oracle_answers(h2, us, vs)
-    np.testing.assert_array_equal(
-        np.asarray(eng.mr_batch(us, vs)).astype(np.int64), want)
-    for u, v, w in zip(us[:8], vs[:8], want[:8]):
-        assert eng.mr(int(u), int(v)) == int(w)
-        assert eng.s_reach(int(u), int(v), 2) == (int(w) >= 2)
 
 
 @pytest.mark.parametrize("backend", UPDATABLE)

@@ -43,24 +43,9 @@ def _mixed_requests(h, rng, count):
 
 
 # ---------------------------------------------------------------------------
-# service answers == oracle, on snapshot-shaped and traversal-shaped backends
+# service lifecycle (the per-backend service-vs-oracle equivalence check
+# moved into the conformance matrix: tests/test_conformance.py)
 # ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_service_matches_oracle(backend):
-    h = random_hypergraph(30, 45, seed=3)
-    svc = serve(h, backend, start=False)
-    rng = np.random.default_rng(7)
-    reqs, want = _mixed_requests(h, rng, 80)
-    futs = svc.submit_many(reqs)
-    assert svc.pending() == 80
-    svc.drain()
-    assert svc.pending() == 0
-    for req, fut, w in zip(reqs, futs, want):
-        got = fut.result(timeout=0)
-        assert got == w, (req, got, w)
-        assert isinstance(got, int if req.kind == "mr" else bool)
-
 
 def test_service_background_thread():
     h = random_hypergraph(25, 35, seed=11)

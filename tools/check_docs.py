@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Four checks, so documentation cannot silently drift from the code:
+Five checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -19,6 +19,11 @@ Four checks, so documentation cannot silently drift from the code:
    `repro.serve.reach_service.REQUEST_TYPES` both ways — adding,
    renaming, or removing a request type without documenting it fails
    the build.
+5. The construction-mode table in docs/ARCHITECTURE.md (rows of the
+   form ``| `serial` | `build_fast` | ... |``) matches the live
+   `repro.core.hlindex.CONSTRUCTION_MODES` both ways — documenting a
+   builder option that does not exist, or adding one without
+   documenting it, fails the build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -39,6 +44,8 @@ _CAPABILITY_ROW = re.compile(
     re.M)
 _REQUEST_ROW = re.compile(
     r"^\|\s*`(\w+Request)`\s*\|\s*`(\w+)`\s*\|", re.M)
+_CONSTRUCTION_ROW = re.compile(
+    r"^\|\s*`(\w+)`\s*\|\s*`(build_\w+)`\s*\|", re.M)
 
 
 def doc_files():
@@ -128,20 +135,50 @@ def check_request_type_table():
     return problems
 
 
+def check_construction_table():
+    from repro.core.hlindex import CONSTRUCTION_MODES
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    documented = dict(_CONSTRUCTION_ROW.findall(arch.read_text()))
+    problems = []
+    for mode, fn in CONSTRUCTION_MODES.items():
+        if mode not in documented:
+            problems.append(
+                f"docs/ARCHITECTURE.md construction table is missing the "
+                f"`{mode}` (builder `{fn.__name__}`) row")
+        elif documented[mode] != fn.__name__:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents construction mode "
+                f"`{mode}` as `{documented[mode]}` but the live builder "
+                f"is `{fn.__name__}`")
+    for mode in documented:
+        if mode not in CONSTRUCTION_MODES:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents construction mode "
+                f"`{mode}` (`{documented[mode]}`) that the live "
+                f"repro.core.hlindex.CONSTRUCTION_MODES does not have")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_backend_table()
                 + check_update_capability_table()
-                + check_request_type_table())
+                + check_request_type_table()
+                + check_construction_table())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
         return 1
     from repro.api import available_backends, update_capabilities
+    from repro.core.hlindex import CONSTRUCTION_MODES
     from repro.serve.reach_service import REQUEST_TYPES
     print(f"docs OK: links resolve in {len(doc_files())} files; "
           f"backend table covers {available_backends()}; update "
           f"capabilities match {update_capabilities()}; request types "
-          f"match {sorted(REQUEST_TYPES)}")
+          f"match {sorted(REQUEST_TYPES)}; construction modes match "
+          f"{sorted(CONSTRUCTION_MODES)}")
     return 0
 
 
