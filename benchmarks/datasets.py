@@ -6,15 +6,23 @@ statistics* (|V|, |E|, η_avg scaled down to CPU-bench scale) plus the
 structured generators (chains, co-location).  The mapping to the paper's
 Table III is recorded in each entry; EXPERIMENTS.md reports both the
 paper's numbers and ours side by side.
+
+External hypergraphs load through the same entry point: any name ending
+in ``.hif.json`` (or ``.hif``) is treated as a path to an HIF
+(Hypergraph Interchange Format) file and imported via
+``repro.store.read_hif`` — the published datasets, once obtained, drop
+straight into every bench.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core import Hypergraph, random_hypergraph, colocation_hypergraph, \
     planted_chain_hypergraph, from_edge_lists
+from repro.store import read_hif
 
 __all__ = ["BENCH_DATASETS", "make_dataset"]
 
@@ -33,6 +41,10 @@ BENCH_DATASETS: Dict[str, Tuple[str, int, int, int, int, int]] = {
 
 
 def make_dataset(name: str) -> Hypergraph:
+    if name.endswith((".hif.json", ".hif")):
+        if not os.path.exists(name):
+            raise FileNotFoundError(f"HIF dataset file not found: {name}")
+        return read_hif(name)
     if name == "CHAIN":
         return planted_chain_hypergraph(20, 50, overlap=3, extra_size=2)
     if name == "COLO":

@@ -30,6 +30,14 @@ scoped construction on the affected line-graph component(s)
 call (``closure``/``sharded``), or ``UpdateUnsupported`` (the static
 baselines).
 
+Indexes survive the process that built them (``repro.store``):
+
+    save_index("paper.hlidx", eng)               # versioned, checksummed
+    eng2 = build_engine(restore="paper.hlidx")   # mmap load, no rebuild
+    store = IndexStore("idx.d", checkpoint_every=64)
+    store.attach(eng)                            # WAL: updates journal first
+    eng3 = build_engine(restore="idx.d")         # checkpoint + WAL replay
+
 Serving heavy request traffic goes through the request-based service
 instead of hand-assembled batches (``repro.serve.reach_service``):
 
@@ -92,6 +100,8 @@ from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
                                    colocation_hypergraph, paper_figure1)
 from repro.serve.reach_service import (MRRequest, ReachabilityService,
                                        SReachRequest)
+from repro.store import (IndexStore, load_index, read_hif, save_index,
+                         write_hif)
 
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
@@ -101,6 +111,7 @@ __all__ = [
     "ReachabilityService", "MRRequest", "SReachRequest", "serve",
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
+    "IndexStore", "save_index", "load_index", "read_hif", "write_hif",
 ]
 
 

@@ -384,7 +384,7 @@ class ShardedEngine(_EngineBase):
         w_star, m_true = cls._closure_of(h, mesh, axes, schedule, rounds)
         return cls(h, mesh, axes, schedule, w_star, m_true, rounds)
 
-    def update(self, inserts=(), deletes=()) -> None:
+    def _apply_update(self, inserts=(), deletes=()) -> None:
         """Recompute the resident structure for the edited graph on the
         same mesh (the block-sharded closure, or the sharded-built labels
         in the ``build_labels`` regime — no incremental form either way,

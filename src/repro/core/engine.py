@@ -76,7 +76,7 @@ from .hypergraph import Hypergraph, apply_edge_edits
 from .hlindex import (CONSTRUCTION_MODES, HLIndex, build_basic, build_fast,
                       build_sharded, pad_label_rows)
 from .minimal import minimize
-from .maintenance import apply_updates
+from .maintenance import apply_updates, normalize_update_batch
 from .query import DeviceSnapshot, mr_query, s_reach_query
 from .online import NeighborCache, mr_online
 from .frontier import (SparseLineGraph, frontier_batched_mr,
@@ -207,6 +207,8 @@ class _EngineBase:
         # (unknown or whole-structure rebuild)
         self._dirty_rows: Optional[np.ndarray] = np.empty(0, np.int64)
         self.last_snapshot_refresh_rows = 0
+        # write-ahead sink (repro.store): None = updates are not journaled
+        self._wal = None
 
     @classmethod
     def build(cls, h: Hypergraph, **opts) -> "ReachabilityEngine":
@@ -227,9 +229,48 @@ class _EngineBase:
                     f"vertex id {int(x)} out of range [0, {self.h.n})")
 
     def update(self, inserts=(), deletes=()) -> None:
+        """Template method every backend shares: gate on capability,
+        validate + canonicalize the batch, journal it durably (when a
+        WAL sink is attached — fsync *before* the in-memory structure
+        changes), then hand the canonical batch to the backend's
+        ``_apply_update``.  Ordering matters: a batch that would be
+        rejected is never journaled, and a journaled batch is replayed
+        byte-identically on restart (``repro.store``)."""
+        if self.update_capability == "unsupported":
+            raise UpdateUnsupported(
+                f"backend {self.name!r} does not maintain its structure "
+                f"under hyperedge updates; build a fresh engine instead")
+        ins, dels = normalize_update_batch(self.h, inserts, deletes)
+        wal = self._wal
+        if wal is not None:
+            wal.append(self.version + 1, ins, dels)
+        self._apply_update(ins, dels)
+        if wal is not None:
+            wal.committed(self)
+
+    def _apply_update(self, inserts, deletes) -> None:
+        """Backend hook behind ``update``: mutate the structure in place
+        for an already-validated, canonical batch and call
+        ``_graph_changed``.  Only backends whose ``update_capability``
+        is not ``"unsupported"`` are ever called here."""
         raise UpdateUnsupported(
-            f"backend {self.name!r} does not maintain its structure under "
-            f"hyperedge updates; build a fresh engine instead")
+            f"backend {self.name!r} declares update_capability="
+            f"{self.update_capability!r} but implements no _apply_update")
+
+    def attach_wal(self, sink) -> None:
+        """Journal every subsequent ``update`` through ``sink`` — any
+        object with ``append(version, inserts, deletes)`` (durable,
+        called before the apply) and ``committed(engine)`` (called
+        after); ``repro.store.WriteAheadLog`` and ``IndexStore`` both
+        qualify."""
+        self._wal = sink
+
+    def detach_wal(self):
+        """Stop journaling; returns the detached sink (the store's
+        replay path detaches around ``update`` so replayed records are
+        not re-journaled)."""
+        sink, self._wal = self._wal, None
+        return sink
 
     def _graph_changed(self, new_h: Hypergraph, dirty_rows=None) -> None:
         """Install the edited graph and bump ``version``.  ``dirty_rows``
@@ -405,25 +446,45 @@ def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
     return "online"
 
 
-def build(h: Hypergraph, backend: str = "auto", *,
-          batch_hint: Optional[int] = None, mesh=None,
+def build(h: Optional[Hypergraph] = None, backend: str = "auto", *,
+          restore=None, batch_hint: Optional[int] = None, mesh=None,
           **opts) -> "ReachabilityEngine":
-    """Build a reachability engine over ``h``.
+    """Build a reachability engine over ``h`` — or restore one from disk.
 
     Args:
-      h: the hypergraph to serve.
+      h: the hypergraph to serve (omit iff ``restore`` is given).
       backend: a registry key (see ``available_backends()``) or
-        ``"auto"`` to let ``plan_backend`` choose.
+        ``"auto"`` to let ``plan_backend`` choose.  With ``restore`` a
+        non-auto value asserts what the persisted engine must be.
+      restore: path to a ``repro.store`` artifact — an ``IndexStore``
+        directory (checkpoint + WAL replay + re-attach, the warm-restart
+        path) or a single ``save_index`` file.  No construction runs:
+        the index loads mmap-backed and only the journaled update suffix
+        replays.
       batch_hint: expected query batch size, consumed by the planner.
       mesh: optional ``jax.sharding.Mesh``.  Consulted by the planner
         (see ``plan_backend``) and forwarded to the ``sharded`` backend;
-        ignored by single-device backends.
+        ignored by single-device backends.  A restored ``sharded``
+        engine re-shards onto it.
       **opts: backend-specific options, passed to the backend's
         ``build`` (e.g. ``minimize_labels=False`` or
         ``construction="sharded"`` for "hl-index", ``schedule="ring"``
         or ``build_labels=True`` for "sharded", ``device_budget_bytes``
-        for the planner).
+        for the planner) — or, with ``restore``, the
+        ``restore_engine`` options (``verify``, ``checkpoint_every``,
+        ``attach``).
     """
+    if restore is not None:
+        if h is not None:
+            raise ValueError(
+                "build(restore=...) loads a persisted engine; passing a "
+                "hypergraph too is ambiguous — use one or the other")
+        from ..store import restore_engine
+        return restore_engine(
+            restore, mesh=mesh,
+            expect_backend=None if backend == "auto" else backend, **opts)
+    if h is None:
+        raise ValueError("build() needs a hypergraph (or restore=<path>)")
     budget = opts.pop("device_budget_bytes", None)
     if backend == "auto":
         backend = plan_backend(h, batch_hint, mesh=mesh,
@@ -582,7 +643,7 @@ class HLIndexEngine(_EngineBase):
                                 n=n, lmax=lmax, version=self.version,
                                 backend=self.name)
 
-    def update(self, inserts=(), deletes=()) -> None:
+    def _apply_update(self, inserts=(), deletes=()) -> None:
         new_h, self.idx, report = apply_updates(
             self.h, self.idx, inserts, deletes,
             builder=self._builder, minimizer=self._minimizer)
@@ -649,7 +710,7 @@ class OnlineEngine(_EngineBase):
         self._check_vertex_ids(u, v)
         return mr_online(self.h, int(u), int(v), self.cache)
 
-    def update(self, inserts=(), deletes=()) -> None:
+    def _apply_update(self, inserts=(), deletes=()) -> None:
         new_h, old_to_new, touched = apply_edge_edits(self.h, inserts,
                                                       deletes)
         if self.cache is not None:
@@ -680,7 +741,7 @@ class FrontierEngine(_EngineBase):
               rounds: Optional[int] = None) -> "FrontierEngine":
         return cls(h, SparseLineGraph(h), rounds)
 
-    def update(self, inserts=(), deletes=()) -> None:
+    def _apply_update(self, inserts=(), deletes=()) -> None:
         new_h, old_to_new, touched = apply_edge_edits(self.h, inserts,
                                                       deletes)
         self.g = self.g.updated(new_h, old_to_new, touched)
@@ -817,7 +878,7 @@ class ClosureEngine(_EngineBase):
     def build(cls, h: Hypergraph, *, method: str = "maxmin") -> "ClosureEngine":
         return cls(h, mr_matrix(h, method=method), method)
 
-    def update(self, inserts=(), deletes=()) -> None:
+    def _apply_update(self, inserts=(), deletes=()) -> None:
         # dense closures have no cheap incremental form (one new overlap
         # can rewrite O(m²) entries); recompute whole, same protocol
         new_h, _, _ = apply_edge_edits(self.h, inserts, deletes)

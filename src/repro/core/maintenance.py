@@ -60,7 +60,41 @@ from .hypergraph import (Hypergraph, apply_edge_edits,
 from .hlindex import HLIndex, build_fast, splice_rank
 
 __all__ = ["insert_hyperedge", "delete_hyperedge", "apply_updates",
-           "component_of", "UpdateReport"]
+           "component_of", "normalize_update_batch", "UpdateReport"]
+
+
+def normalize_update_batch(h: Hypergraph, inserts: Sequence[Iterable[int]] = (),
+                           deletes: Sequence[int] = ()
+                           ) -> Tuple[List[List[int]], List[int]]:
+    """Validate and canonicalize one update batch *before* it is applied
+    (or journaled — the WAL layer calls this first so a rejected batch is
+    never written durably).
+
+    Mirrors ``apply_edge_edits`` exactly: deletes must name existing
+    hyperedges of ``h`` (same ``IndexError``), inserts dedup-sort their
+    members and drop empties (same ``IndexError`` on negative vertex
+    ids), and non-empty inserts keep their argument order (their appended
+    hyperedge ids depend on it).  Applying the canonical batch is
+    byte-identical to applying the original, so a replayed WAL record
+    reproduces the live update bit for bit.
+
+    Returns ``(inserts, deletes)`` as plain nested int lists — directly
+    JSON-serializable for the journal.
+    """
+    dels = sorted({int(d) for d in deletes})
+    for d in dels:
+        if not 0 <= d < h.m:
+            raise IndexError(f"delete of hyperedge {d} out of range "
+                             f"[0, {h.m})")
+    ins: List[List[int]] = []
+    for ed in inserts:
+        arr = np.unique(np.asarray(list(ed), dtype=np.int64))
+        if arr.size == 0:
+            continue
+        if arr.min() < 0:
+            raise IndexError(f"insert with negative vertex id {arr.min()}")
+        ins.append([int(x) for x in arr])
+    return ins, dels
 
 
 @dataclasses.dataclass(frozen=True)

@@ -273,6 +273,42 @@ class ReachabilityService:
             self.engine.update(inserts, deletes)
             self._stats.updates += 1
 
+    # -- durability (repro.store) ------------------------------------------
+
+    def checkpoint(self, store) -> int:
+        """Durably checkpoint the engine into ``store`` (a
+        ``repro.store.IndexStore``) and attach the store as the engine's
+        WAL sink — every subsequent ``update`` then journals (fsync)
+        before applying, so a crash at any point is recoverable via
+        ``restore``.  Runs under the dispatch lock, never mid-batch.
+        Returns the checkpointed engine version."""
+        with self._dispatch_lock:
+            store.checkpoint(self.engine)
+            store.attach(self.engine)
+            return int(self.engine.version)
+
+    @classmethod
+    def restore(cls, store_or_path, *, mesh=None,
+                axes: Optional[Tuple[str, str]] = None, verify: bool = True,
+                expect_backend: Optional[str] = None,
+                **service_opts) -> "ReachabilityService":
+        """Warm-restart serving from a ``repro.store`` artifact (an
+        ``IndexStore`` instance, a store directory, or a single
+        ``save_index`` file): the checkpoint loads mmap-backed — no
+        construction — the WAL suffix replays, the store re-attaches as
+        the WAL sink, and the service starts around the restored engine.
+        The engine arrives at its persisted version, so the first
+        micro-batch installs a resident snapshot keyed to exactly that
+        version — the same version-keyed swap a live ``update`` takes."""
+        from repro.store import IndexStore, restore_engine
+        if isinstance(store_or_path, IndexStore):
+            engine = store_or_path.restore(mesh=mesh, verify=verify,
+                                           expect_backend=expect_backend)
+        else:
+            engine = restore_engine(store_or_path, mesh=mesh, verify=verify,
+                                    expect_backend=expect_backend)
+        return cls(engine, mesh=mesh, axes=axes, **service_opts)
+
     def stats(self) -> ServiceStats:
         with self._dispatch_lock:
             return dataclasses.replace(

@@ -14,12 +14,16 @@ no update path ``UpdateUnsupported``) exactly where the pinned tables
 below say so.  Registry drift — a new backend, or a capability change —
 fails the matrix until the expectations here are updated consciously.
 """
+import os
+import tempfile
+
 import numpy as np
 import pytest
 
 from repro.api import (available_backends, build_engine, serve,
                        update_capabilities, random_hypergraph,
                        planted_chain_hypergraph, from_edge_lists)
+from repro.store import load_index, save_index
 from repro.core import MSTOracle, PaddedIndex, apply_edge_edits, build_fast, \
     minimize
 from repro.core.engine import SnapshotUnsupported, UpdateUnsupported
@@ -47,12 +51,39 @@ EXPECTED_UPDATE = {
 
 # matrix rows: every registered backend under default options, plus the
 # non-default construction paths (sharded label construction; the
-# sharded backend's label regime) — same conformance bar for all
+# sharded backend's label regime) and the persistence round trip
+# (``_restore``: build → save_index → load_index, then the full op set —
+# a restored engine meets exactly the same conformance bar as a built
+# one) — same bar for all
 CONFIGS = {name: (name, {}) for name in BACKENDS}
 CONFIGS["hl-index[sharded-build]"] = (
     "hl-index", dict(construction="sharded", num_shards=3))
 CONFIGS["sharded[labels]"] = ("sharded", dict(build_labels=True))
+CONFIGS["hl-index[restored]"] = ("hl-index", dict(_restore=True))
+CONFIGS["sharded[restored]"] = ("sharded", dict(_restore=True))
 CONFIG_NAMES = sorted(CONFIGS)
+
+# TemporaryDirectory handles for the restored rows: the loaded engines
+# hold zero-copy views into the checkpoint mmap, so the files must
+# outlive every test that queries them
+_RESTORE_DIRS = []
+
+
+def _build(h, config):
+    """Build one engine for a matrix row; ``_restore`` rows round-trip
+    it through a persisted checkpoint first."""
+    backend, opts = CONFIGS[config]
+    opts = dict(opts)
+    restore = opts.pop("_restore", False)
+    eng = build_engine(h, backend, **opts)
+    if restore:
+        td = tempfile.TemporaryDirectory()
+        _RESTORE_DIRS.append(td)
+        path = os.path.join(td.name, "ckpt.hlidx")
+        save_index(path, eng)
+        eng = load_index(path)
+        assert eng.name == backend
+    return eng
 
 GRAPHS = {
     "random": lambda: random_hypergraph(30, 45, seed=3),
@@ -91,8 +122,7 @@ def _engine(graph_name, h, config):
     """One engine per (graph, config), shared by the read-only ops."""
     key = (graph_name, config)
     if key not in _ENGINES:
-        backend, opts = CONFIGS[config]
-        _ENGINES[key] = build_engine(h, backend, **opts)
+        _ENGINES[key] = _build(h, config)
     return _ENGINES[key]
 
 
@@ -168,8 +198,8 @@ def test_op_snapshot(case, config):
 @pytest.mark.parametrize("config", CONFIG_NAMES)
 def test_op_update(case, config):
     name, h, us, vs, want = case
-    backend, opts = CONFIGS[config]
-    eng = build_engine(h, backend, **opts)    # fresh: update mutates
+    backend, _ = CONFIGS[config]
+    eng = _build(h, config)                   # fresh: update mutates
     assert eng.version == 0
     if EXPECTED_UPDATE[backend] == "unsupported":
         with pytest.raises(UpdateUnsupported):
@@ -202,7 +232,10 @@ def test_op_update(case, config):
 def test_service_matches_oracle(config):
     backend, opts = CONFIGS[config]
     h = random_hypergraph(30, 45, seed=3)
-    svc = serve(h, backend, start=False, **opts)
+    if opts.get("_restore"):
+        svc = serve(_build(h, config), start=False)
+    else:
+        svc = serve(h, backend, start=False, **opts)
     oracle = MSTOracle(h)
     rng = np.random.default_rng(7)
     reqs, want = [], []

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Five checks, so documentation cannot silently drift from the code:
+Six checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -24,6 +24,11 @@ Five checks, so documentation cannot silently drift from the code:
    `repro.core.hlindex.CONSTRUCTION_MODES` both ways — documenting a
    builder option that does not exist, or adding one without
    documenting it, fails the build.
+6. The on-disk format-version table in docs/ARCHITECTURE.md (rows of
+   the form ``| `1` | `aligned-segments-v1` | ... |``) matches the live
+   `repro.store.FORMAT_REGISTRY` both ways — shipping a format version
+   the docs don't describe, or documenting one the code cannot read,
+   fails the build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -46,6 +51,8 @@ _REQUEST_ROW = re.compile(
     r"^\|\s*`(\w+Request)`\s*\|\s*`(\w+)`\s*\|", re.M)
 _CONSTRUCTION_ROW = re.compile(
     r"^\|\s*`(\w+)`\s*\|\s*`(build_\w+)`\s*\|", re.M)
+# a digit-only first cell is unique to the format-version table
+_FORMAT_ROW = re.compile(r"^\|\s*`(\d+)`\s*\|\s*`([\w.-]+)`\s*\|", re.M)
 
 
 def doc_files():
@@ -162,11 +169,40 @@ def check_construction_table():
     return problems
 
 
+def check_format_table():
+    from repro.store import FORMAT_REGISTRY
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    documented = {int(v): layout
+                  for v, layout in _FORMAT_ROW.findall(arch.read_text())}
+    problems = []
+    for version, layout in FORMAT_REGISTRY.items():
+        if version not in documented:
+            problems.append(
+                f"docs/ARCHITECTURE.md format-version table is missing "
+                f"on-disk format `{version}` (layout `{layout}`)")
+        elif documented[version] != layout:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents on-disk format "
+                f"`{version}` as `{documented[version]}` but the live "
+                f"repro.store.FORMAT_REGISTRY says `{layout}`")
+    for version in documented:
+        if version not in FORMAT_REGISTRY:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents on-disk format "
+                f"`{version}` (`{documented[version]}`) that the live "
+                f"repro.store.FORMAT_REGISTRY cannot read")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_backend_table()
                 + check_update_capability_table()
                 + check_request_type_table()
-                + check_construction_table())
+                + check_construction_table()
+                + check_format_table())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
@@ -174,11 +210,13 @@ def main() -> int:
     from repro.api import available_backends, update_capabilities
     from repro.core.hlindex import CONSTRUCTION_MODES
     from repro.serve.reach_service import REQUEST_TYPES
+    from repro.store import FORMAT_REGISTRY
     print(f"docs OK: links resolve in {len(doc_files())} files; "
           f"backend table covers {available_backends()}; update "
           f"capabilities match {update_capabilities()}; request types "
           f"match {sorted(REQUEST_TYPES)}; construction modes match "
-          f"{sorted(CONSTRUCTION_MODES)}")
+          f"{sorted(CONSTRUCTION_MODES)}; on-disk formats match "
+          f"{FORMAT_REGISTRY}")
     return 0
 
 
