@@ -136,6 +136,10 @@ def serve(h_or_engine, backend: str = "auto", *, mesh=None,
     to the engine build.  ``axes`` names the mesh (row, column) axes in
     both layers and is forwarded to both: the ``sharded`` engine's
     block-sharding and the service's ``to_mesh`` re-landing.
+    ``use_kernels`` is likewise two-layer: it reaches the engine build
+    (Pallas closure/batch paths, for backends that take it) and the
+    service (Pallas label-join serving view) — with a prebuilt engine
+    it configures the service alone.
     """
     service_opts = {k: opts.pop(k) for k in
                     ("max_batch", "min_bucket", "max_wait_ms")
@@ -143,7 +147,12 @@ def serve(h_or_engine, backend: str = "auto", *, mesh=None,
     axes = opts.pop("axes", None)
     if axes is not None:
         service_opts["axes"] = axes
+    use_kernels = opts.pop("use_kernels", None)
+    if use_kernels is not None:
+        service_opts["use_kernels"] = use_kernels
     if isinstance(h_or_engine, Hypergraph):
+        if use_kernels is not None:
+            opts["use_kernels"] = use_kernels
         # resolve "auto" here so backend-specific options route correctly
         # (axes must reach the sharded engine even when the planner — not
         # the caller — picked it)

@@ -96,13 +96,28 @@ def _local_maxmin(a: jax.Array, b: jax.Array, chunk: int = 128) -> jax.Array:
     return out
 
 
+def _local_contraction(use_kernels: bool):
+    """The per-device (max,min) contraction inside a closure round:
+    the scanned jnp broadcast (default), or the Pallas ``maxmin_matmul``
+    kernel (compiled on TPU, interpret-mode elsewhere) when the engine
+    was built with ``use_kernels=True``."""
+    if not use_kernels:
+        return _local_maxmin
+    from ..kernels.maxmin_matmul import maxmin_matmul_pallas
+    from ..kernels.ops import use_interpret
+    interp = use_interpret()
+    return functools.partial(maxmin_matmul_pallas, interpret=interp)
+
+
 def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
-                         axes: Tuple[str, str] = ("data", "model")):
+                         axes: Tuple[str, str] = ("data", "model"),
+                         use_kernels: bool = False):
     """Returns a jit-able fn R -> max(R, R∘R) for R sharded P(axes)."""
     row_ax, col_ax = axes
     n_row = mesh.shape[row_ax]
     n_col = mesh.shape[col_ax]
     spec = P(row_ax, col_ax)
+    contract = _local_contraction(use_kernels)
 
     if schedule == "allgather":
         def round_fn(r):
@@ -110,9 +125,12 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
                 # blk: [m/nr, m/nc] local block at mesh position (i, j)
                 row_panel = jax.lax.all_gather(blk, col_ax, axis=1, tiled=True)
                 col_panel = jax.lax.all_gather(blk, row_ax, axis=0, tiled=True)
-                return jnp.maximum(blk, _local_maxmin(row_panel, col_panel))
+                return jnp.maximum(blk, contract(row_panel, col_panel))
+            # pallas_call has no replication rule, so the kernel path
+            # must skip the rep check (the body is rep-correct either way)
             return shard_map(body, mesh=mesh, in_specs=spec,
-                                 out_specs=spec)(r)
+                                 out_specs=spec,
+                                 check_vma=not use_kernels)(r)
         return round_fn
 
     if schedule == "ring":
@@ -133,7 +151,7 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
                     seg = jax.lax.dynamic_slice(
                         row_panel, (0, src * block_rows),
                         (block_rows, block_rows))
-                    acc = jnp.maximum(acc, _local_maxmin(seg, panel))
+                    acc = jnp.maximum(acc, contract(seg, panel))
                     panel = jax.lax.ppermute(panel, row_ax, perm)
                     return (acc, panel), None
 
@@ -141,7 +159,8 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
                                            jnp.arange(n_row))
                 return acc
             return shard_map(body, mesh=mesh, in_specs=spec,
-                                 out_specs=spec)(r)
+                                 out_specs=spec,
+                                 check_vma=not use_kernels)(r)
         return round_fn
 
     raise ValueError(schedule)
@@ -150,7 +169,7 @@ def sharded_maxmin_round(mesh: Mesh, *, schedule: str = "allgather",
 def sharded_maxmin_closure(w, mesh: Mesh, *, rounds: Optional[int] = None,
                            schedule: str = "allgather",
                            axes: Tuple[str, str] = ("data", "model"),
-                           trim: bool = True):
+                           trim: bool = True, use_kernels: bool = False):
     """Bottleneck closure of a 2-D block-sharded line graph.
 
     ``w`` is the [m, m] line graph (host or device); the result is W*,
@@ -166,7 +185,8 @@ def sharded_maxmin_closure(w, mesh: Mesh, *, rounds: Optional[int] = None,
     n_rounds = rounds if rounds is not None else max(1, int(np.ceil(np.log2(max(m, 2)))))
     sharding = NamedSharding(mesh, P(*axes))
     r = jax.device_put(jnp.asarray(wp), sharding)
-    round_fn = jax.jit(sharded_maxmin_round(mesh, schedule=schedule, axes=axes))
+    round_fn = jax.jit(sharded_maxmin_round(mesh, schedule=schedule, axes=axes,
+                                            use_kernels=use_kernels))
     for _ in range(n_rounds):
         r = round_fn(r)
     if not trim:
@@ -335,7 +355,7 @@ class ShardedEngine(_EngineBase):
         return self._idx is not None
 
     @staticmethod
-    def _closure_of(h, mesh, axes, schedule, rounds):
+    def _closure_of(h, mesh, axes, schedule, rounds, use_kernels=False):
         """(padded sharded W*, m_true) for ``h`` — build and update share
         this so an updated engine is bit-identical to a rebuilt one."""
         if h.m == 0:
@@ -343,7 +363,7 @@ class ShardedEngine(_EngineBase):
         w = h.line_graph(np.int32).astype(np.float32)
         w_star = sharded_maxmin_closure(w, mesh, rounds=rounds,
                                         schedule=schedule, axes=axes,
-                                        trim=False)
+                                        trim=False, use_kernels=use_kernels)
         return w_star, h.m
 
     @classmethod
@@ -354,7 +374,8 @@ class ShardedEngine(_EngineBase):
               build_labels: bool = False,
               minimize_labels: bool = True,
               workers: Optional[int] = None,
-              num_shards: Optional[int] = None) -> "ShardedEngine":
+              num_shards: Optional[int] = None,
+              use_kernels: bool = False) -> "ShardedEngine":
         """``schedule`` ∈ {"allgather", "ring"} picks the collective plan
         (see module docstring); ``rounds`` caps the squaring ladder
         (None = ⌈log2 mp⌉, exact).  ``axes`` names the (row, column) mesh
@@ -364,7 +385,10 @@ class ShardedEngine(_EngineBase):
         sharded construction on this mesh instead of the resident
         closure (``minimize_labels`` / ``workers`` / ``num_shards``
         configure it); the closure knobs ``schedule`` / ``rounds`` are
-        then unused."""
+        then unused.  ``use_kernels=True`` runs the per-device closure
+        contraction through the Pallas ``maxmin_matmul`` kernel and
+        batch queries through the Pallas label join (interpret-mode
+        fallback off TPU; answers byte-identical, conformance-pinned)."""
         if axes is None:
             axes = (("data", "model") if mesh is None
                     else tuple(mesh.axis_names[-2:]))
@@ -378,11 +402,16 @@ class ShardedEngine(_EngineBase):
             minimizer = minimize if minimize_labels else None
             idx = build_sharded(h, mesh=mesh, minimizer=minimizer,
                                 workers=workers, num_shards=num_shards)
-            return cls(h, mesh, axes, schedule, None, h.m, rounds,
-                       idx=idx, minimizer=minimizer, workers=workers,
-                       num_shards=num_shards)
-        w_star, m_true = cls._closure_of(h, mesh, axes, schedule, rounds)
-        return cls(h, mesh, axes, schedule, w_star, m_true, rounds)
+            eng = cls(h, mesh, axes, schedule, None, h.m, rounds,
+                      idx=idx, minimizer=minimizer, workers=workers,
+                      num_shards=num_shards)
+            eng.use_kernels = bool(use_kernels)
+            return eng
+        w_star, m_true = cls._closure_of(h, mesh, axes, schedule, rounds,
+                                         use_kernels)
+        eng = cls(h, mesh, axes, schedule, w_star, m_true, rounds)
+        eng.use_kernels = bool(use_kernels)
+        return eng
 
     def _apply_update(self, inserts=(), deletes=()) -> None:
         """Recompute the resident structure for the edited graph on the
@@ -400,7 +429,8 @@ class ShardedEngine(_EngineBase):
             self._m_true = new_h.m
         else:
             self._w_star, self._m_true = self._closure_of(
-                new_h, self.mesh, self.axes, self.schedule, self.rounds)
+                new_h, self.mesh, self.axes, self.schedule, self.rounds,
+                self.use_kernels)
             self._m_padded = int(self._w_star.shape[0])
         self._graph_changed(new_h)
 
@@ -423,11 +453,11 @@ class ShardedEngine(_EngineBase):
 
     def mr_batch(self, us, vs) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().mr(us, vs)).astype(np.int64)
+        return np.asarray(self._query_snapshot().mr(us, vs)).astype(np.int64)
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+        return np.asarray(self._query_snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
         if not self._snapshot_current():

@@ -77,7 +77,7 @@ from .hlindex import (CONSTRUCTION_MODES, HLIndex, build_basic, build_fast,
                       build_sharded, pad_label_rows)
 from .minimal import minimize
 from .maintenance import apply_updates, normalize_update_batch
-from .query import DeviceSnapshot, mr_query, s_reach_query
+from .query import DeviceSnapshot, KernelSnapshot, mr_query, s_reach_query
 from .online import NeighborCache, mr_online
 from .frontier import (SparseLineGraph, frontier_batched_mr,
                        frontier_batched_s_reach)
@@ -86,7 +86,8 @@ from .baselines import (ETEIndex, MSTOracle, ThresholdComponentIndex,
 from .semiring import mr_matrix, vertex_mr_from_edge_mr
 
 __all__ = [
-    "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
+    "ReachabilityEngine", "DeviceSnapshot", "KernelSnapshot",
+    "SnapshotUnsupported",
     "UpdateUnsupported", "register_backend", "available_backends",
     "update_capabilities", "plan_backend", "build", "validate_batch",
     "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
@@ -209,6 +210,10 @@ class _EngineBase:
         self.last_snapshot_refresh_rows = 0
         # write-ahead sink (repro.store): None = updates are not journaled
         self._wal = None
+        # kernel-path batch queries (Pallas label join); flipped by the
+        # snapshot-serving backends' ``build(use_kernels=True)``
+        self.use_kernels = False
+        self._kernel_view: Optional[KernelSnapshot] = None
 
     @classmethod
     def build(cls, h: Hypergraph, **opts) -> "ReachabilityEngine":
@@ -314,6 +319,23 @@ class _EngineBase:
     def _snapshot_current(self) -> bool:
         snap = getattr(self, "_snap", None)
         return snap is not None and snap.version == self.version
+
+    def _query_snapshot(self):
+        """The snapshot view batch queries run through: the plain
+        ``DeviceSnapshot`` (XLA ``batched_mr``), or — with
+        ``use_kernels`` — a cached ``KernelSnapshot`` wrapper that
+        answers through the Pallas label-join kernel.  The wrapper is
+        rebuilt whenever ``snapshot()`` hands back a different object
+        (update / patch / re-derivation), so it can never serve stale
+        label rows."""
+        snap = self.snapshot()
+        if not self.use_kernels:
+            return snap
+        kv = self._kernel_view
+        if kv is None or kv.base is not snap:
+            kv = KernelSnapshot(snap)
+            self._kernel_view = kv
+        return kv
 
     def s_reach(self, u: int, v: int, s: int) -> bool:
         return self.mr(u, v) >= s
@@ -553,7 +575,8 @@ class HLIndexEngine(_EngineBase):
               index: Optional[HLIndex] = None,
               construction: str = "auto", mesh=None,
               workers: Optional[int] = None,
-              num_shards: Optional[int] = None) -> "HLIndexEngine":
+              num_shards: Optional[int] = None,
+              use_kernels: bool = False) -> "HLIndexEngine":
         """``index`` reuses a prebuilt (unminimized) HL-index instead of
         running construction again — e.g. to derive the minimized engine
         from an ablation engine's labels.
@@ -567,6 +590,12 @@ class HLIndexEngine(_EngineBase):
         neighbor-overlap precompute onto the devices.  Scoped updates
         keep using the same construction mode on the affected
         component(s).
+
+        ``use_kernels`` answers batch queries through the Pallas
+        label-join kernel (``KernelSnapshot``) instead of the XLA
+        ``batched_mr`` program — compiled on TPU, interpret-mode
+        fallback elsewhere; answers are byte-identical either way
+        (conformance-matrix rows pin both).
         """
         construction = _resolve_construction(construction, mesh, workers,
                                              num_shards)
@@ -589,6 +618,7 @@ class HLIndexEngine(_EngineBase):
                 idx = minimizer(idx)
         eng = cls(h, idx, builder=builder, minimizer=minimizer)
         eng.construction = construction
+        eng.use_kernels = bool(use_kernels)
         return eng
 
     def mr(self, u: int, v: int) -> int:
@@ -601,11 +631,11 @@ class HLIndexEngine(_EngineBase):
 
     def mr_batch(self, us, vs) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().mr(us, vs))
+        return np.asarray(self._query_snapshot().mr(us, vs))
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+        return np.asarray(self._query_snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
         """Current padded device form.  After a scoped ``update`` the
@@ -667,7 +697,8 @@ class HLIndexBasicEngine(HLIndexEngine):
     def build(cls, h: Hypergraph, *, cover_check: bool = True,
               construction: str = "auto", mesh=None,
               workers: Optional[int] = None,
-              num_shards: Optional[int] = None) -> "HLIndexBasicEngine":
+              num_shards: Optional[int] = None,
+              use_kernels: bool = False) -> "HLIndexBasicEngine":
         base = functools.partial(build_basic, cover_check=cover_check)
         construction = _resolve_construction(construction, mesh, workers,
                                              num_shards)
@@ -682,6 +713,7 @@ class HLIndexBasicEngine(HLIndexEngine):
             idx = base(h)
         eng = cls(h, idx, builder=builder)
         eng.construction = construction
+        eng.use_kernels = bool(use_kernels)
         return eng
 
 
@@ -789,11 +821,11 @@ class ETEEngine(_EngineBase):
 
     def mr_batch(self, us, vs) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().mr(us, vs))
+        return np.asarray(self._query_snapshot().mr(us, vs))
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+        return np.asarray(self._query_snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
         if not self._snapshot_current():
@@ -896,11 +928,11 @@ class ClosureEngine(_EngineBase):
         # batches go through the fused device join — the reason the
         # planner picks this backend for batched small-graph workloads
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().mr(us, vs))
+        return np.asarray(self._query_snapshot().mr(us, vs))
 
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
-        return np.asarray(self.snapshot().s_reach(us, vs, int(s)))
+        return np.asarray(self._query_snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
         if not self._snapshot_current():

@@ -24,7 +24,7 @@ import numpy as np
 from .hlindex import HLIndex
 
 __all__ = ["mr_query", "s_reach_query", "mr_query_dicts", "DeviceSnapshot",
-           "PaddedIndex", "batched_mr"]
+           "KernelSnapshot", "PaddedIndex", "batched_mr"]
 
 
 def mr_query(idx: HLIndex, u: int, v: int) -> int:
@@ -292,6 +292,103 @@ class DeviceSnapshot:
         if self.lmax == 0:          # no labels anywhere: nothing is reachable
             return jnp.zeros(us.shape, jnp.int32)
         return batched_mr(self.ranks, self.svals, us, jnp.asarray(vs))
+
+    def s_reach(self, us, vs, s: int) -> jnp.ndarray:
+        return self.mr(us, vs) >= s
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def _gather_rows(ranks, svals, us, vs):
+    return ranks[us], svals[us], ranks[vs], svals[vs]
+
+
+class KernelSnapshot:
+    """Kernel-path query view over a ``DeviceSnapshot``.
+
+    Answers ``mr`` / ``s_reach`` batches through the Pallas
+    ``label_join`` kernel instead of the host merge-join or the XLA
+    ``batched_mr`` program: query rows are gathered from the resident
+    label tensors on device, the batch is padded up to a power-of-two
+    bucket (the same admission-bucket policy ``ReachabilityService``
+    uses, so serving traffic compiles one kernel program per bucket
+    shape, not per batch size), and the [bucket, Lmax] rows feed
+    ``label_join_pallas``.  Memory stays label-mass: the view holds no
+    tensors of its own beyond the wrapped snapshot.
+
+    The wrapped ``base`` snapshot keeps its identity — patch/re-land
+    plumbing (``patch_rows``, ``to_mesh(base=...)``) operates on the
+    underlying ``DeviceSnapshot`` and the view is rebuilt around the
+    result, which is why this is composition rather than subclassing.
+
+    ``interpret=None`` resolves the Pallas execution mode from the host
+    (``use_interpret()``): compiled on TPU, interpreter elsewhere —
+    the automatic fallback behind the ``use_kernels=`` engine flag.
+    Construction validates the rank key space against the kernel's
+    padding sentinels once (``validate_ranks``), so per-batch calls
+    don't pay the check.
+    """
+
+    def __init__(self, base: DeviceSnapshot, *, bq: int = 128,
+                 bl: int = 256, min_bucket: int = 8,
+                 interpret: Optional[bool] = None):
+        from ..kernels.label_join import label_join_pallas, validate_ranks
+        from ..kernels.ops import use_interpret
+        validate_ranks(base.ranks)
+        self.base = base
+        self._join = label_join_pallas
+        self._bq = int(bq)
+        self._bl = int(bl)
+        self._min_bucket = max(1, int(min_bucket))
+        self.interpret = use_interpret() if interpret is None else bool(
+            interpret)
+
+    # geometry / identity delegate to the wrapped snapshot
+    @property
+    def backend(self) -> str:
+        return self.base.backend
+
+    @property
+    def version(self) -> int:
+        return self.base.version
+
+    @property
+    def lmax(self) -> int:
+        return self.base.lmax
+
+    def nbytes(self) -> int:
+        return self.base.nbytes()
+
+    def _bucket(self, q: int) -> int:
+        b = self._min_bucket
+        while b < q:
+            b *= 2
+        return b
+
+    def mr(self, us, vs) -> jnp.ndarray:
+        us = np.asarray(us, np.int32).ravel()
+        vs = np.asarray(vs, np.int32).ravel()
+        q = us.size
+        if q == 0 or self.base.lmax == 0:
+            return jnp.zeros((q,), jnp.int32)
+        bucket = self._bucket(q)
+        if bucket > q:
+            # pad with a repeat of the first pair: always in range, and
+            # the padded answers are sliced off below
+            us = np.concatenate([us, np.full(bucket - q, us[0], np.int32)])
+            vs = np.concatenate([vs, np.full(bucket - q, vs[0], np.int32)])
+        ru, su, rv, sv = _gather_rows(self.base.ranks, self.base.svals,
+                                      jnp.asarray(us), jnp.asarray(vs))
+        if len(self.base.ranks.devices()) > 1:
+            # mesh-sharded base: the interpreter path runs the kernel on
+            # one device, so collapse the gathered query rows (bucket ×
+            # Lmax, not the label mass) onto a single addressable device
+            dev = next(iter(sorted(self.base.ranks.devices(),
+                                   key=lambda d: d.id)))
+            ru, su, rv, sv = (jax.device_put(t, dev)
+                              for t in (ru, su, rv, sv))
+        out = self._join(ru, su, rv, sv, bq=min(self._bq, bucket),
+                         bl=self._bl, interpret=self.interpret)
+        return out[:q]
 
     def s_reach(self, us, vs, s: int) -> jnp.ndarray:
         return self.mr(us, vs) >= s

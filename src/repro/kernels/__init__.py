@@ -3,14 +3,17 @@ from . import ref
 from .maxmin_matmul import maxmin_matmul_pallas
 from .overlap import overlap_pallas
 from .threshold_closure import threshold_step_pallas
-from .label_join import label_join_pallas
-from .flash_decode import flash_decode_pallas
+from .label_join import label_join_pallas, validate_ranks, MAX_RANK
+from .registry import KERNEL_REGISTRY, KernelSpec
 from .ops import (maxmin_matmul, overlap, threshold_step, label_join,
-                  maxmin_closure_kernel, threshold_mr_kernel, use_interpret)
+                  maxmin_closure_kernel, threshold_mr_kernel, use_interpret,
+                  interpret_available)
 
 __all__ = [
     "ref", "maxmin_matmul_pallas", "overlap_pallas", "threshold_step_pallas",
-    "label_join_pallas", "flash_decode_pallas", "maxmin_matmul", "overlap", "threshold_step",
+    "label_join_pallas", "validate_ranks", "MAX_RANK",
+    "KERNEL_REGISTRY", "KernelSpec",
+    "maxmin_matmul", "overlap", "threshold_step",
     "label_join", "maxmin_closure_kernel", "threshold_mr_kernel",
-    "use_interpret",
+    "use_interpret", "interpret_available",
 ]

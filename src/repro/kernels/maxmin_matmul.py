@@ -31,7 +31,11 @@ def _kernel(a_ref, b_ref, o_ref, *, k_chunk: int):
     a = a_ref[...]                      # [bm, bk]
     b = b_ref[...]                      # [bk, bn]
     bk = a.shape[1]
-    steps = bk // k_chunk
+    # ceil, not floor: bk // k_chunk drops the tail columns when bk is
+    # not a k_chunk multiple.  dynamic_slice clamps the last start index
+    # so the final chunk overlaps the previous one — exact here, because
+    # (max, min) accumulation is idempotent.
+    steps = -(-bk // k_chunk)
 
     def body(i, acc):
         a_c = jax.lax.dynamic_slice_in_dim(a, i * k_chunk, k_chunk, axis=1)
@@ -49,10 +53,13 @@ def maxmin_matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 128,
                          bn: int = 128, bk: int = 128, k_chunk: int = 8,
                          interpret: bool = False) -> jax.Array:
     """(max, min) matmul with explicit VMEM tiling.  Non-negative inputs;
-    shapes are padded to block multiples with the semiring zero."""
+    shapes are padded to block multiples with the semiring zero.  Empty
+    operands (m, n or k of 0) return the semiring-zero result directly."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
+    if m == 0 or n == 0 or k == 0:
+        return jnp.zeros((m, n), a.dtype)
     mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
     if mp or kp:
         a = jnp.pad(a, ((0, mp), (0, kp)))

@@ -21,11 +21,40 @@ from .threshold_closure import threshold_step_pallas
 from .label_join import label_join_pallas
 
 __all__ = ["maxmin_matmul", "overlap", "threshold_step", "label_join",
-           "maxmin_closure_kernel", "threshold_mr_kernel", "use_interpret"]
+           "maxmin_closure_kernel", "threshold_mr_kernel", "use_interpret",
+           "interpret_available"]
 
 
 def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+_INTERPRET_PROBE: Optional[bool] = None
+
+
+def interpret_available() -> bool:
+    """Whether ``pallas_call(interpret=True)`` works on this host.
+
+    Probed once with a tiny kernel and cached; tests use it to skip
+    cleanly on builds where the Pallas interpreter is unavailable
+    (e.g. a jaxlib compiled without the Mosaic interpret path).
+    """
+    global _INTERPRET_PROBE
+    if _INTERPRET_PROBE is None:
+        try:
+            from jax.experimental import pallas as pl
+
+            def _copy(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            x = jnp.arange(8, dtype=jnp.int32)
+            out = pl.pallas_call(
+                _copy, out_shape=jax.ShapeDtypeStruct((8,), jnp.int32),
+                interpret=True)(x)
+            _INTERPRET_PROBE = bool((np.asarray(out) == np.arange(8)).all())
+        except Exception:
+            _INTERPRET_PROBE = False
+    return _INTERPRET_PROBE
 
 
 def _force_ref() -> bool:

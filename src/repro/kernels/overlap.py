@@ -36,6 +36,8 @@ def overlap_pallas(b_inc: jax.Array, *, bm: int = 128, bn: int = 128,
     """W = B·Bᵀ (f32 accumulate).  Diagonal = |e_i| (row self-product), so
     the result is exactly the line graph of ``hypergraph.line_graph``."""
     m, n = b_inc.shape
+    if m == 0 or n == 0:
+        return jnp.zeros((m, m), jnp.float32)
     mp, kp = (-m) % max(bm, bn), (-n) % bk
     if mp or kp:
         b_inc = jnp.pad(b_inc, ((0, mp), (0, kp)))

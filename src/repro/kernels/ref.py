@@ -9,11 +9,14 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["maxmin_matmul_ref", "overlap_ref", "threshold_step_ref",
-           "label_join_ref", "flash_decode_ref"]
+           "label_join_ref"]
 
 
 def maxmin_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
-    """C[i,j] = max_k min(A[i,k], B[k,j]).  Non-negative domain."""
+    """C[i,j] = max_k min(A[i,k], B[k,j]).  Non-negative domain, so the
+    empty-k reduction identity is 0."""
+    if a.shape[1] == 0:
+        return jnp.zeros((a.shape[0], b.shape[1]), a.dtype)
     return jnp.minimum(a[:, :, None], b[None, :, :]).max(axis=1)
 
 
@@ -44,18 +47,5 @@ def label_join_ref(ru: jax.Array, su: jax.Array,
     """
     eq = ru[:, :, None] == rv[:, None, :]                      # [Q, L, L]
     cand = jnp.where(eq, jnp.minimum(su[:, :, None], sv[:, None, :]), 0)
-    return cand.max(axis=(1, 2))
-
-
-def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                     mask: jax.Array) -> jax.Array:
-    """Single-token decode attention oracle.
-    q [B,H,hd]; k/v [B,S,H,hd]; mask [B,S] additive."""
-    import numpy as np
-    scale = 1.0 / np.sqrt(q.shape[-1])
-    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
-    s = s + mask[:, None, :]
-    w = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhs,bshd->bhd", w,
-                      v.astype(jnp.float32)).astype(q.dtype)
+    return cand.max(axis=(1, 2)) if ru.size else jnp.zeros((ru.shape[0],),
+                                                           su.dtype)

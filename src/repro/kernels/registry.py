@@ -1,0 +1,48 @@
+"""Registry of every Pallas kernel in the package.
+
+Single source of truth for "what kernels exist and what validates
+them": the differential-test harness (``tests/test_kernels_diff.py``)
+asserts it fuzzes every entry, and docs check 7
+(``tools/check_docs.py``) asserts the kernel-capability table in
+docs/ARCHITECTURE.md matches it both ways.  A kernel added without a
+registry entry fails the harness-coverage assertion; an entry without a
+doc row fails the docs build.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from . import ref
+from .label_join import label_join_pallas
+from .maxmin_matmul import maxmin_matmul_pallas
+from .overlap import overlap_pallas
+from .threshold_closure import threshold_step_pallas
+
+__all__ = ["KERNEL_REGISTRY", "KernelSpec"]
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    kernel: Callable          # the pallas_call wrapper
+    reference: Callable       # its pure-jnp oracle in ref.py
+    unit: str                 # compute unit the TPU lowering targets
+    consumer: str             # production call-site served by the kernel
+
+
+KERNEL_REGISTRY: dict[str, KernelSpec] = {
+    "label_join": KernelSpec(
+        kernel=label_join_pallas, reference=ref.label_join_ref, unit="VPU",
+        consumer="KernelSnapshot.mr — serving-path batched merge-join"),
+    "maxmin_matmul": KernelSpec(
+        kernel=maxmin_matmul_pallas, reference=ref.maxmin_matmul_ref,
+        unit="VPU",
+        consumer="sharded closure build/update local contraction"),
+    "overlap": KernelSpec(
+        kernel=overlap_pallas, reference=ref.overlap_ref, unit="MXU",
+        consumer="line-graph W = B·Bᵀ construction"),
+    "threshold_step": KernelSpec(
+        kernel=threshold_step_pallas, reference=ref.threshold_step_ref,
+        unit="MXU",
+        consumer="threshold_mr_kernel boolean-closure squaring round"),
+}

@@ -43,6 +43,8 @@ def threshold_step_pallas(r: jax.Array, *, bm: int = 128, bn: int = 128,
     """out[s] = (R[s] @ R[s] > 0) for a [S, m, m] float 0/1 batch."""
     s, m, m2 = r.shape
     assert m == m2
+    if s == 0 or m == 0:
+        return r
     pad = (-m) % max(bm, bn, bk)
     if pad:
         r = jnp.pad(r, ((0, 0), (0, pad), (0, pad)))

@@ -59,6 +59,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.engine import SnapshotUnsupported
+from repro.core.query import KernelSnapshot
 
 __all__ = ["MRRequest", "SReachRequest", "ReachabilityService",
            "ServiceStats", "REQUEST_TYPES"]
@@ -108,6 +109,7 @@ class ServiceStats:
     rows_rederived: int = 0          # label rows re-derived across refreshes
     rows_full: int = 0               # rows a from-scratch refresh would cost
     mesh_rows_patched: int = 0       # rows re-landed into a mesh-resident copy
+    kernel_batches: int = 0          # batches answered by the Pallas join
     updates: int = 0
 
     def as_dict(self) -> Dict[str, object]:
@@ -151,6 +153,13 @@ class ReachabilityService:
       max_wait_ms: how long the background loop lingers after the first
         pending request to let more arrivals coalesce (the classic
         batching latency/throughput knob).  0 dispatches immediately.
+      use_kernels: answer snapshot batches through the Pallas label-join
+        kernel (``KernelSnapshot``) instead of the XLA ``batched_mr``
+        program.  ``None`` (default) inherits the engine's own
+        ``use_kernels`` flag, so ``serve(h, backend,
+        use_kernels=True)`` flips both build and serving.  The kernel
+        view shares this service's admission buckets (``min_bucket``),
+        so traffic compiles one kernel program per bucket shape.
       start: start the background admission thread.  With
         ``start=False`` the service is synchronous: call ``drain()`` to
         process everything pending (deterministic; what the tests and
@@ -160,7 +169,8 @@ class ReachabilityService:
     def __init__(self, engine, *, mesh=None,
                  axes: Optional[Tuple[str, str]] = None,
                  max_batch: int = 4096, min_bucket: int = 8,
-                 max_wait_ms: float = 0.5, start: bool = True):
+                 max_wait_ms: float = 0.5,
+                 use_kernels: Optional[bool] = None, start: bool = True):
         if max_batch < 1 or min_bucket < 1 or min_bucket > max_batch:
             raise ValueError(
                 f"need 1 <= min_bucket <= max_batch; got min_bucket="
@@ -181,6 +191,9 @@ class ReachabilityService:
         self._snap = None            # resident serving snapshot (mesh or host)
         self._host_snap = None       # the engine-derived snapshot _snap mirrors
         self._snapshot_ok: Optional[bool] = None   # None = not probed yet
+        self.use_kernels = (bool(getattr(engine, "use_kernels", False))
+                            if use_kernels is None else bool(use_kernels))
+        self._kernel_snap: Optional[KernelSnapshot] = None
         self._running = False
         self._thread: Optional[threading.Thread] = None
         if start:
@@ -389,6 +402,8 @@ class ReachabilityService:
         self._stats.padded_queries += bucket - q
         self._stats.bucket_histogram[bucket] = \
             self._stats.bucket_histogram.get(bucket, 0) + 1
+        if isinstance(snap, KernelSnapshot):
+            self._stats.kernel_batches += 1
 
         if kind == "mr":
             if snap is not None:
@@ -422,7 +437,7 @@ class ReachabilityService:
         if self._snapshot_ok is False:
             return None
         if self._snap is not None and self._snap.version == eng.version:
-            return self._snap
+            return self._serving_view()
         # capture the dirty set *before* snapshot() resets it: it is the
         # row delta between the engine's cached snapshot and the fresh
         # one — valid for patching our resident copy only if our copy
@@ -440,7 +455,7 @@ class ReachabilityService:
             return None
         self._snapshot_ok = True
         if host is prev_host and self._snap is not None:
-            return self._snap
+            return self._serving_view()
         self._stats.snapshot_refreshes += 1
         self._stats.rows_rederived += int(eng.last_snapshot_refresh_rows)
         self._stats.rows_full += int(eng.h.n)
@@ -459,7 +474,22 @@ class ReachabilityService:
         # single reference assignment = the atomic swap; in-flight code
         # never observes a half-updated snapshot
         self._host_snap, self._snap = host, snap
-        return snap
+        return self._serving_view()
+
+    def _serving_view(self):
+        """The view micro-batches answer through: the resident snapshot,
+        or — with ``use_kernels`` — a ``KernelSnapshot`` wrapper over it,
+        rebuilt at every swap (so a re-landed or patched resident copy
+        can never be served through a stale wrapper).  The wrapper
+        shares this service's admission buckets, which is what bounds
+        kernel-program count to one per bucket shape."""
+        if not self.use_kernels or self._snap is None:
+            return self._snap
+        kv = self._kernel_snap
+        if kv is None or kv.base is not self._snap:
+            kv = KernelSnapshot(self._snap, min_bucket=self.min_bucket)
+            self._kernel_snap = kv
+        return kv
 
     def _already_on_mesh(self, snap) -> bool:
         """True when the engine's snapshot is already sharded over this

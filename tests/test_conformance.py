@@ -61,6 +61,11 @@ CONFIGS["hl-index[sharded-build]"] = (
 CONFIGS["sharded[labels]"] = ("sharded", dict(build_labels=True))
 CONFIGS["hl-index[restored]"] = ("hl-index", dict(_restore=True))
 CONFIGS["sharded[restored]"] = ("sharded", dict(_restore=True))
+# kernel rows: the same op set answered through the Pallas device path —
+# label_join for batched queries (KernelSnapshot) and maxmin_matmul for
+# the sharded closure contraction — pinned to the identical oracle
+CONFIGS["hl-index[kernels]"] = ("hl-index", dict(use_kernels=True))
+CONFIGS["sharded[kernels]"] = ("sharded", dict(use_kernels=True))
 CONFIG_NAMES = sorted(CONFIGS)
 
 # TemporaryDirectory handles for the restored rows: the loaded engines

@@ -1,0 +1,246 @@
+"""Kernel differential-test harness: every Pallas kernel vs its oracle.
+
+Three layers, all in interpret mode (same kernel body the TPU compiles,
+Python-evaluated):
+
+1. a **registry coverage** assertion — every entry of
+   ``repro.kernels.KERNEL_REGISTRY`` must have a differ here, so a
+   kernel can't ship without landing in this harness;
+2. a **fixed-seed regression corpus** of adversarial shapes — block
+   non-multiples, single-row, empty operands, all-pad label rows,
+   ranks at the sentinel bound, and the ``bk % k_chunk != 0``
+   tail-truncation counterexample this harness flushed out of
+   ``maxmin_matmul`` (the last k-chunk sweep used floor instead of
+   ceil division, silently dropping tail columns);
+3. **hypothesis fuzzing** over shapes/blocks/dtypes when hypothesis is
+   installed (skipped cleanly otherwise — the corpus above still runs).
+
+Every differ asserts exact equality: these kernels are integer/semiring
+work, so there is no tolerance to hide behind.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref, KERNEL_REGISTRY, interpret_available
+from repro.kernels.label_join import (label_join_pallas, validate_ranks,
+                                      MAX_RANK)
+from repro.kernels.maxmin_matmul import maxmin_matmul_pallas
+from repro.kernels.overlap import overlap_pallas
+from repro.kernels.threshold_closure import threshold_step_pallas
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = [
+    pytest.mark.kernels,
+    pytest.mark.skipif(not interpret_available(),
+                       reason="pallas interpret mode unavailable"),
+]
+
+_PAD = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# differs — one per registry entry, shared by the corpus and the fuzzers
+# ---------------------------------------------------------------------------
+
+def _label_rows(rng, q, l, high):
+    """Random padded label rows: ragged true lengths (including all-pad
+    rows), ascending int32 ranks, svals in [1, 9)."""
+    ranks = np.full((q, l), _PAD, np.int32)
+    svals = np.zeros((q, l), np.int32)
+    for i in range(q):
+        li = int(rng.integers(0, l + 1))
+        r = np.unique(rng.integers(0, max(high, 1), li)).astype(np.int64)
+        ranks[i, :r.size] = np.minimum(r, MAX_RANK)
+        svals[i, :r.size] = rng.integers(1, 9, r.size)
+    return jnp.asarray(ranks), jnp.asarray(svals)
+
+
+def diff_label_join(q, l, bq, bl, seed, high=200):
+    rng = np.random.default_rng(seed)
+    ru, su = _label_rows(rng, q, l, high)
+    rv, sv = _label_rows(rng, q, l, high)
+    got = label_join_pallas(ru, su, rv, sv, bq=bq, bl=bl, interpret=True)
+    want = ref.label_join_ref(ru, su, rv, sv)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def diff_maxmin_matmul(m, k, n, bm, bn, bk, k_chunk, seed, dtype=jnp.int32):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 12, (m, k))).astype(dtype)
+    b = jnp.asarray(rng.integers(0, 12, (k, n))).astype(dtype)
+    got = maxmin_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, k_chunk=k_chunk,
+                               interpret=True)
+    want = ref.maxmin_matmul_ref(a, b)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def diff_overlap(m, n, bm, bn, bk, seed):
+    rng = np.random.default_rng(seed)
+    b_inc = jnp.asarray((rng.random((m, n)) < 0.3).astype(np.float32))
+    got = overlap_pallas(b_inc, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.overlap_ref(b_inc)
+    assert got.shape == (m, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def diff_threshold_step(s, m, bm, bn, bk, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray((rng.random((s, m, m)) < 0.2).astype(np.float32))
+    got = threshold_step_pallas(r, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.threshold_step_ref(r)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+DIFFERS = {
+    "label_join": diff_label_join,
+    "maxmin_matmul": diff_maxmin_matmul,
+    "overlap": diff_overlap,
+    "threshold_step": diff_threshold_step,
+}
+
+
+def test_harness_covers_registry():
+    # both directions: a registered kernel with no differ, or a differ
+    # for a kernel that no longer exists, fails loudly
+    assert set(DIFFERS) == set(KERNEL_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed regression corpus — adversarial shapes, kept forever
+# ---------------------------------------------------------------------------
+
+LABEL_JOIN_CORPUS = [
+    # (q, l, bq, bl, seed) — Q/L non-multiples of the blocks, single
+    # query, empty operands, multi-tile L sweeps
+    (5, 7, 32, 4, 0),
+    (130, 33, 32, 8, 1),
+    (1, 1, 128, 256, 2),
+    (64, 300, 16, 64, 3),        # L > bq: the L-sub-tiling path
+    (31, 129, 8, 32, 4),
+    (0, 5, 32, 8, 5),            # Q = 0
+    (3, 0, 32, 8, 6),            # L = 0
+]
+
+MAXMIN_CORPUS = [
+    # (m, k, n, bm, bn, bk, k_chunk, seed)
+    (33, 32, 17, 32, 32, 32, 5, 0),   # bk % k_chunk != 0 — the regression
+                                      # this harness found: floor instead
+                                      # of ceil k-chunk steps dropped
+                                      # columns 30-31 of every k block
+    (1, 1, 1, 128, 128, 128, 8, 1),   # single element
+    (8, 37, 9, 16, 16, 16, 7, 2),     # nothing divides anything
+    (0, 4, 4, 32, 32, 32, 8, 3),      # empty m
+    (4, 0, 4, 32, 32, 32, 8, 4),      # empty k
+    (4, 4, 0, 32, 32, 32, 8, 5),      # empty n
+    (64, 64, 64, 32, 32, 32, 1, 6),   # k_chunk = 1
+]
+
+OVERLAP_CORPUS = [
+    (10, 17, 32, 32, 32, 0), (1, 1, 16, 16, 16, 1),
+    (0, 5, 32, 32, 32, 2), (5, 0, 32, 32, 32, 3), (130, 40, 32, 32, 32, 4),
+]
+
+THRESHOLD_CORPUS = [
+    (1, 16, 32, 32, 32, 0), (3, 33, 16, 16, 16, 1), (0, 8, 16, 16, 16, 2),
+    (2, 0, 16, 16, 16, 3),
+]
+
+
+@pytest.mark.parametrize("q,l,bq,bl,seed", LABEL_JOIN_CORPUS)
+def test_label_join_corpus(q, l, bq, bl, seed):
+    diff_label_join(q, l, bq, bl, seed)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk,kc,seed", MAXMIN_CORPUS)
+def test_maxmin_matmul_corpus(m, k, n, bm, bn, bk, kc, seed):
+    diff_maxmin_matmul(m, k, n, bm, bn, bk, kc, seed)
+    diff_maxmin_matmul(m, k, n, bm, bn, bk, kc, seed, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("m,n,bm,bn,bk,seed", OVERLAP_CORPUS)
+def test_overlap_corpus(m, n, bm, bn, bk, seed):
+    diff_overlap(m, n, bm, bn, bk, seed)
+
+
+@pytest.mark.parametrize("s,m,bm,bn,bk,seed", THRESHOLD_CORPUS)
+def test_threshold_step_corpus(s, m, bm, bn, bk, seed):
+    diff_threshold_step(s, m, bm, bn, bk, seed)
+
+
+# -- sentinel bound (satellite of the label-join rewrite) -------------------
+
+def test_label_join_rank_at_sentinel_bound():
+    # MAX_RANK itself is a legal real rank and must join; one above it
+    # aliases the padded-query-row sentinel and must be rejected
+    ru = jnp.asarray([[0, MAX_RANK]], jnp.int32)
+    su = jnp.asarray([[3, 5]], jnp.int32)
+    rv = jnp.asarray([[MAX_RANK, _PAD]], jnp.int32)
+    sv = jnp.asarray([[4, 0]], jnp.int32)
+    validate_ranks(ru)
+    got = label_join_pallas(ru, su, rv, sv, bq=8, interpret=True)
+    assert int(got[0]) == 4
+    with pytest.raises(ValueError, match="sentinel"):
+        validate_ranks(jnp.asarray([[MAX_RANK + 1]], jnp.int32))
+    # MAX_RANK + 2 == INT32_MAX is the padding sentinel itself — legal
+    validate_ranks(jnp.asarray([[MAX_RANK + 2]], jnp.int32))
+
+
+def test_label_join_pad_rows_never_match():
+    # a batch padded up to bq adds all-sentinel u rows; they must answer
+    # 0 even against an all-pad v row (INT32_MAX vs INT32_MAX-1)
+    q, l = 3, 4                      # bq=8 forces 5 padded query rows
+    ru = jnp.full((q, l), _PAD, jnp.int32)
+    su = jnp.zeros((q, l), jnp.int32)
+    got = label_join_pallas(ru, su, ru, su, bq=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(q, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing — skipped cleanly when hypothesis is not installed
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _SETTINGS = settings(max_examples=30, deadline=None,
+                         suppress_health_check=[HealthCheck.too_slow])
+
+    @_SETTINGS
+    @given(q=st.integers(0, 40), l=st.integers(0, 40),
+           bq=st.sampled_from([8, 32, 128]),
+           bl=st.sampled_from([4, 16, 64, 256]),
+           seed=st.integers(0, 2**16), high=st.sampled_from([8, 200]))
+    def test_label_join_fuzz(q, l, bq, bl, seed, high):
+        diff_label_join(q, l, bq, bl, seed, high=high)
+
+    @_SETTINGS
+    @given(m=st.integers(0, 48), k=st.integers(0, 48), n=st.integers(0, 48),
+           bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([8, 16, 32]),
+           bk=st.sampled_from([8, 16, 32]), kc=st.integers(1, 9),
+           seed=st.integers(0, 2**16),
+           dtype=st.sampled_from([jnp.int32, jnp.float32]))
+    def test_maxmin_matmul_fuzz(m, k, n, bm, bn, bk, kc, seed, dtype):
+        diff_maxmin_matmul(m, k, n, bm, bn, bk, kc, seed, dtype=dtype)
+
+    @_SETTINGS
+    @given(m=st.integers(0, 40), n=st.integers(0, 40),
+           bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([8, 16, 32]),
+           bk=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**16))
+    def test_overlap_fuzz(m, n, bm, bn, bk, seed):
+        diff_overlap(m, n, bm, bn, bk, seed)
+
+    @_SETTINGS
+    @given(s=st.integers(0, 4), m=st.integers(0, 40),
+           b=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**16))
+    def test_threshold_step_fuzz(s, m, b, seed):
+        diff_threshold_step(s, m, b, b, b, seed)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; fixed-seed corpus "
+                             "above still covers every kernel")
+    def test_hypothesis_fuzzing():
+        pass

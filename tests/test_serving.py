@@ -137,6 +137,69 @@ def test_service_update_churn_matches_oracle():
     assert svc.stats().snapshot_refreshes >= 1
 
 
+@pytest.mark.parametrize("backend", ["hl-index", "sharded"])
+def test_kernel_serving_byte_identical_under_churn(backend):
+    # kernel row of the serving matrix: twin services over the same
+    # engine backend, one host merge-join and one Pallas label-join,
+    # fed identical request streams across an update() sequence — the
+    # kernel path must stay byte-identical (values *and* types), not
+    # just oracle-correct
+    rng = np.random.default_rng(11)
+    h = random_hypergraph(20, 16, seed=8)
+    host = serve(h, backend, start=False)
+    kern = serve(h, backend, start=False, use_kernels=True)
+    for _ in range(3):
+        ins, dels = [], []
+        if h.m > 2 and rng.random() < 0.6:
+            dels = [int(rng.integers(h.m))]
+        if rng.random() < 0.8:
+            ins = [rng.choice(h.n + 1, size=3, replace=False)]
+        host.update(inserts=ins, deletes=dels)
+        kern.update(inserts=ins, deletes=dels)
+        h, _, _ = apply_edge_edits(h, ins, dels)
+        reqs, want = _mixed_requests(h, rng, 40)
+        hf = host.submit_many(reqs)
+        kf = kern.submit_many([dataclasses.replace(r) for r in reqs])
+        host.drain()
+        kern.drain()
+        hres = [f.result(timeout=0) for f in hf]
+        kres = [f.result(timeout=0) for f in kf]
+        assert hres == want
+        assert kres == hres
+        assert [type(r) for r in kres] == [type(r) for r in hres]
+    assert kern.stats().kernel_batches > 0
+    assert host.stats().kernel_batches == 0
+
+
+def test_kernel_serving_mesh_reland_byte_identical():
+    # snapshot re-lands: a mesh-resident service re-lands the snapshot
+    # after each scoped update, and the kernel view must be rebuilt over
+    # the re-landed copy (not answer from the stale one) — twin services
+    # again, byte-identical at every step
+    from repro.core.distributed import default_line_graph_mesh
+    mesh = default_line_graph_mesh()
+    h = planted_chain_hypergraph(4, 8, overlap=2, extra_size=2, seed=1)
+    host = serve(h, "hl-index", mesh=mesh, start=False)
+    kern = serve(h, "hl-index", mesh=mesh, start=False, use_kernels=True)
+    rng = np.random.default_rng(13)
+    for step in range(3):
+        v0 = int(h.edge(0)[0])
+        ins = [[v0, v0 + 1, h.n + step]]
+        host.update(inserts=ins)
+        kern.update(inserts=ins)
+        h, _, _ = apply_edge_edits(h, ins, [])
+        reqs, want = _mixed_requests(h, rng, 30)
+        hf = host.submit_many(reqs)
+        kf = kern.submit_many([dataclasses.replace(r) for r in reqs])
+        host.drain()
+        kern.drain()
+        hres = [f.result(timeout=0) for f in hf]
+        kres = [f.result(timeout=0) for f in kf]
+        assert hres == want
+        assert kres == hres
+    assert kern.stats().kernel_batches >= 3
+
+
 def test_scoped_update_rederives_only_touched_rows():
     # the acceptance criterion: after a scoped update the snapshot
     # refresh touches < n rows (here: one chain component out of four)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Six checks, so documentation cannot silently drift from the code:
+Seven checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -29,6 +29,11 @@ Six checks, so documentation cannot silently drift from the code:
    `repro.store.FORMAT_REGISTRY` both ways — shipping a format version
    the docs don't describe, or documenting one the code cannot read,
    fails the build.
+7. The kernel-capability table in docs/ARCHITECTURE.md (rows of the
+   form ``| `label_join` | `label_join_ref` | VPU | ... |``) matches
+   the live `repro.kernels.KERNEL_REGISTRY` both ways — name, oracle,
+   and compute unit; shipping a Pallas kernel without a doc row, or
+   documenting one the registry does not have, fails the build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -53,6 +58,9 @@ _CONSTRUCTION_ROW = re.compile(
     r"^\|\s*`(\w+)`\s*\|\s*`(build_\w+)`\s*\|", re.M)
 # a digit-only first cell is unique to the format-version table
 _FORMAT_ROW = re.compile(r"^\|\s*`(\d+)`\s*\|\s*`([\w.-]+)`\s*\|", re.M)
+# a `*_ref` second cell is unique to the kernel-capability table
+_KERNEL_ROW = re.compile(
+    r"^\|\s*`(\w+)`\s*\|\s*`(\w+_ref)`\s*\|\s*(\w+)\s*\|", re.M)
 
 
 def doc_files():
@@ -197,18 +205,55 @@ def check_format_table():
     return problems
 
 
+def check_kernel_table():
+    from repro.kernels import KERNEL_REGISTRY
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    documented = {name: (oracle, unit)
+                  for name, oracle, unit
+                  in _KERNEL_ROW.findall(arch.read_text())}
+    problems = []
+    for name, spec in KERNEL_REGISTRY.items():
+        if name not in documented:
+            problems.append(
+                f"docs/ARCHITECTURE.md kernel-capability table is missing "
+                f"registered kernel `{name}` (oracle "
+                f"`{spec.reference.__name__}`, unit {spec.unit})")
+            continue
+        oracle, unit = documented[name]
+        if oracle != spec.reference.__name__:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents kernel `{name}` with "
+                f"oracle `{oracle}` but the registry says "
+                f"`{spec.reference.__name__}`")
+        if unit != spec.unit:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents kernel `{name}` on unit "
+                f"{unit} but the registry says {spec.unit}")
+    for name in documented:
+        if name not in KERNEL_REGISTRY:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents kernel `{name}` that the "
+                f"live repro.kernels.KERNEL_REGISTRY does not have")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_backend_table()
                 + check_update_capability_table()
                 + check_request_type_table()
                 + check_construction_table()
-                + check_format_table())
+                + check_format_table()
+                + check_kernel_table())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
         return 1
     from repro.api import available_backends, update_capabilities
     from repro.core.hlindex import CONSTRUCTION_MODES
+    from repro.kernels import KERNEL_REGISTRY
     from repro.serve.reach_service import REQUEST_TYPES
     from repro.store import FORMAT_REGISTRY
     print(f"docs OK: links resolve in {len(doc_files())} files; "
@@ -216,7 +261,8 @@ def main() -> int:
           f"capabilities match {update_capabilities()}; request types "
           f"match {sorted(REQUEST_TYPES)}; construction modes match "
           f"{sorted(CONSTRUCTION_MODES)}; on-disk formats match "
-          f"{FORMAT_REGISTRY}")
+          f"{FORMAT_REGISTRY}; kernel table matches "
+          f"{sorted(KERNEL_REGISTRY)}")
     return 0
 
 
