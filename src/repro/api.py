@@ -39,9 +39,11 @@ Indexes survive the process that built them (``repro.store``):
     eng3 = build_engine(restore="idx.d")         # checkpoint + WAL replay
 
 Serving heavy request traffic goes through the request-based service
-instead of hand-assembled batches (``repro.serve.reach_service``):
+instead of hand-assembled batches (``repro.serve.reach_service``);
+serving knobs live in a typed ``ServiceConfig``:
 
-    svc = serve(h, batch_hint=10_000)            # engine + admission loop
+    svc = serve(h, batch_hint=10_000,            # engine + admission loop
+                config=ServiceConfig(max_batch=1024))
     f = svc.mr(4, 8)                             # Future[int]
     g = svc.submit(SReachRequest(4, 8, s=2))     # Future[bool], mixed s ok
     f.result(); g.result()
@@ -52,6 +54,22 @@ The service coalesces pending requests into fused padded device batches
 (power-of-two buckets bound XLA recompiles) and reuses one
 version-keyed resident snapshot across batches — after a scoped update
 only the dirty label rows are re-derived.
+
+The service is multi-tenant: requests carry ``tenant`` / ``priority`` /
+``deadline_ms`` metadata, the admission queue is weighted-fair across
+tenants within strict priority bands, expired requests fail fast with
+``DeadlineExceeded``, and ``submit_stream`` delivers answers in
+completion order.  ``ServiceConfig(replicas=N)`` scales reads by
+serving round-robin off N mesh-resident snapshot replicas
+(``ReplicaGroup``) — updates apply on the single writer and only the
+dirty label rows fan out to the replicas:
+
+    svc = serve(h, config=ServiceConfig(
+        tenants=(TenantSpec("analytics", weight=1.0),
+                 TenantSpec("dashboard", weight=4.0)),
+        replicas=2))
+    svc.submit(MRRequest(4, 8, tenant="dashboard",
+                         priority="interactive", deadline_ms=50.0))
 
 Multi-device serving goes through the same two calls — build a mesh and
 pass it:
@@ -87,6 +105,9 @@ construction modes, and the sharding schedules — is documented in
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 from repro.compat import make_mesh
 from repro.core.engine import (ReachabilityEngine, DeviceSnapshot,
                                SnapshotUnsupported, UpdateUnsupported,
@@ -99,7 +120,10 @@ from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
                                    planted_chain_hypergraph,
                                    colocation_hypergraph, paper_figure1)
 from repro.serve.reach_service import (MRRequest, ReachabilityService,
-                                       SReachRequest)
+                                       Request, ServiceConfig, SReachRequest)
+from repro.serve.replicas import ReplicaGroup
+from repro.serve.scheduler import (PRIORITY_CLASSES, DeadlineExceeded,
+                                   TenantSpec)
 from repro.store import (IndexStore, load_index, read_hif, save_index,
                          write_hif)
 
@@ -108,22 +132,34 @@ __all__ = [
     "UpdateUnsupported", "build_engine", "available_backends",
     "update_capabilities", "plan_backend", "register_backend",
     "validate_batch", "make_mesh",
-    "ReachabilityService", "MRRequest", "SReachRequest", "serve",
+    "ReachabilityService", "ReplicaGroup", "serve", "ServiceConfig",
+    "TenantSpec", "PRIORITY_CLASSES", "DeadlineExceeded",
+    "Request", "MRRequest", "SReachRequest",
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
     "IndexStore", "save_index", "load_index", "read_hif", "write_hif",
 ]
 
+# service knobs that used to ride along in serve(**opts); still accepted
+# for one release through the deprecation shim below
+_LEGACY_SERVICE_KWARGS = ("max_batch", "min_bucket", "max_wait_ms",
+                          "axes", "use_kernels")
 
-def serve(h_or_engine, backend: str = "auto", *, mesh=None,
+
+def serve(h_or_engine, backend: str = "auto", *,
+          config: ServiceConfig = None, mesh=None,
           start: bool = True, batch_hint=None,
           **opts) -> ReachabilityService:
     """One-call serving: build an engine (unless given one) and wrap it
-    in a ``ReachabilityService``.
+    in a ``ReachabilityService`` (or, with ``config.replicas > 1``, a
+    ``ReplicaGroup``).
 
     Args:
       h_or_engine: a ``Hypergraph`` to build an engine over, or an
         already-built ``ReachabilityEngine`` to serve as-is.
+      config: a ``ServiceConfig`` — the typed home of every serving knob
+        (batching, tenant weights, priorities, replicas; see its
+        docstring).  Defaults to ``ServiceConfig()``.
       backend / batch_hint / mesh / engine ``**opts``: forwarded to
         ``build_engine`` when a hypergraph is passed.  ``mesh`` is also
         handed to the service so the resident snapshot is kept
@@ -131,36 +167,40 @@ def serve(h_or_engine, backend: str = "auto", *, mesh=None,
       start: start the background admission thread (``start=False`` =
         synchronous mode; call ``svc.drain()``).
 
-    Service knobs (``max_batch``, ``min_bucket``, ``max_wait_ms``) ride
-    along in ``**opts`` and are routed to the service, everything else
-    to the engine build.  ``axes`` names the mesh (row, column) axes in
-    both layers and is forwarded to both: the ``sharded`` engine's
-    block-sharding and the service's ``to_mesh`` re-landing.
-    ``use_kernels`` is likewise two-layer: it reaches the engine build
-    (Pallas closure/batch paths, for backends that take it) and the
-    service (Pallas label-join serving view) — with a prebuilt engine
-    it configures the service alone.
+    ``config.axes`` names the mesh (row, column) axes in both layers
+    and is forwarded to both: the ``sharded`` engine's block-sharding
+    and the service's ``to_mesh`` re-landing.  ``config.use_kernels``
+    is likewise two-layer: it reaches the engine build (Pallas
+    closure/batch paths, for backends that take it) and the service
+    (Pallas label-join serving view) — with a prebuilt engine it
+    configures the service alone.
+
+    Deprecated: the service knobs (``max_batch``, ``min_bucket``,
+    ``max_wait_ms``, ``axes``, ``use_kernels``) are still accepted as
+    bare keyword arguments for one release — they fold into ``config``
+    with a ``DeprecationWarning``.  Everything else in ``**opts`` is an
+    engine-build option.
     """
-    service_opts = {k: opts.pop(k) for k in
-                    ("max_batch", "min_bucket", "max_wait_ms")
-                    if k in opts}
-    axes = opts.pop("axes", None)
-    if axes is not None:
-        service_opts["axes"] = axes
-    use_kernels = opts.pop("use_kernels", None)
-    if use_kernels is not None:
-        service_opts["use_kernels"] = use_kernels
+    legacy = {k: opts.pop(k) for k in _LEGACY_SERVICE_KWARGS if k in opts}
+    cfg = config if config is not None else ServiceConfig()
+    if legacy:
+        warnings.warn(
+            f"passing service options {sorted(legacy)} to serve() as bare "
+            f"keyword arguments is deprecated; pass "
+            f"config=ServiceConfig(...) instead",
+            DeprecationWarning, stacklevel=2)
+        cfg = dataclasses.replace(cfg, **legacy)
     if isinstance(h_or_engine, Hypergraph):
-        if use_kernels is not None:
-            opts["use_kernels"] = use_kernels
+        if cfg.use_kernels is not None:
+            opts["use_kernels"] = cfg.use_kernels
         # resolve "auto" here so backend-specific options route correctly
         # (axes must reach the sharded engine even when the planner — not
         # the caller — picked it)
         resolved = backend if backend != "auto" else plan_backend(
             h_or_engine, batch_hint, mesh=mesh,
             device_budget_bytes=opts.get("device_budget_bytes"))
-        if axes is not None and resolved == "sharded":
-            opts["axes"] = axes      # same axes in both layers
+        if cfg.axes is not None and resolved == "sharded":
+            opts["axes"] = cfg.axes  # same axes in both layers
         engine = build_engine(h_or_engine, resolved, batch_hint=batch_hint,
                               mesh=mesh, **opts)
     else:
@@ -174,5 +214,6 @@ def serve(h_or_engine, backend: str = "auto", *, mesh=None,
                 f"engine options {rejected} make no sense with an "
                 f"already-built engine — they would be silently ignored")
         engine = h_or_engine
-    return ReachabilityService(engine, mesh=mesh, start=start,
-                               **service_opts)
+    if cfg.replicas > 1:
+        return ReplicaGroup(engine, config=cfg, mesh=mesh, start=start)
+    return ReachabilityService(engine, config=cfg, mesh=mesh, start=start)

@@ -68,7 +68,8 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
+from typing import (Callable, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -319,6 +320,31 @@ class _EngineBase:
     def _snapshot_current(self) -> bool:
         snap = getattr(self, "_snap", None)
         return snap is not None and snap.version == self.version
+
+    def snapshot_delta(self, basis: Optional[DeviceSnapshot] = None,
+                       ) -> Tuple[DeviceSnapshot, Optional[np.ndarray]]:
+        """The snapshot fan-out hook: one call returning ``(fresh
+        snapshot, dirty-row delta relative to basis)`` — what a consumer
+        holding device-resident copies landed from ``basis`` needs to
+        bring *all* of them current with row-wise patches instead of
+        full re-lands (``to_mesh(base=, dirty_rows=)``).
+
+        ``basis`` is the host snapshot the caller's copies derive from.
+        The delta is ``None`` (re-land in full) when it is unknowable:
+        no basis, the basis is not the engine's cached snapshot object
+        (another consumer re-derived in between, resetting the delta),
+        or the update was a whole-structure rebuild.  The dirty set must
+        be captured *before* ``snapshot()`` re-derives and resets it,
+        which is exactly the ordering this method encapsulates — the
+        serving layer and ``ReplicaGroup`` both build on it.  Raises
+        ``SnapshotUnsupported`` for backends with no snapshot form."""
+        dirty = (self.dirty_rows()
+                 if basis is not None and self.snapshot_cache() is basis
+                 else None)
+        snap = self.snapshot()
+        if snap is basis:
+            dirty = np.empty(0, np.int64)      # already current: patch nothing
+        return snap, dirty
 
     def _query_snapshot(self):
         """The snapshot view batch queries run through: the plain

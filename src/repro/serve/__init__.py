@@ -19,10 +19,18 @@ _LAZY = {
     "prefill_with_decode": "kvcache",
     "greedy_decode": "kvcache",
     "ReachabilityService": "reach_service",
+    "Request": "reach_service",
     "MRRequest": "reach_service",
     "SReachRequest": "reach_service",
+    "ServiceConfig": "reach_service",
     "ServiceStats": "reach_service",
     "REQUEST_TYPES": "reach_service",
+    "PRIORITY_CLASSES": "scheduler",
+    "TenantSpec": "scheduler",
+    "DeadlineExceeded": "scheduler",
+    "WeightedFairScheduler": "scheduler",
+    "Replica": "replicas",
+    "ReplicaGroup": "replicas",
 }
 
 __all__ = sorted(_LAZY)
@@ -30,7 +38,11 @@ __all__ = sorted(_LAZY)
 if TYPE_CHECKING:  # pragma: no cover - static analysis only
     from .kvcache import greedy_decode, prefill_with_decode      # noqa: F401
     from .reach_service import (MRRequest, ReachabilityService,  # noqa: F401
-                                REQUEST_TYPES, ServiceStats, SReachRequest)
+                                Request, REQUEST_TYPES, ServiceConfig,
+                                ServiceStats, SReachRequest)
+    from .replicas import Replica, ReplicaGroup                  # noqa: F401
+    from .scheduler import (DeadlineExceeded, PRIORITY_CLASSES,  # noqa: F401
+                            TenantSpec, WeightedFairScheduler)
     from .serve_step import make_prefill_step, make_serve_step   # noqa: F401
 
 

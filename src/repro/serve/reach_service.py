@@ -7,14 +7,14 @@ This module turns that surface into a *service*: callers submit typed
 requests and get futures; an admission loop coalesces whatever is
 pending into fused padded device batches and scatters the answers back.
 
-    svc = repro.api.serve(h)                    # or ReachabilityService(eng)
+    svc = repro.api.serve(h, config=ServiceConfig(max_batch=1024))
     f1 = svc.mr(4, 8)                           # Future[int]
     f2 = svc.submit(SReachRequest(4, 8, s=2))   # Future[bool]
     f1.result(), f2.result()
     svc.update(inserts=[[3, 7, 9]])             # serving continues
     svc.close()
 
-Design (the three mechanisms the module exists for):
+Design (the mechanisms the module exists for):
 
 * **Admission micro-batching** — pending requests are grouped by query
   kind (``MRRequest`` vs ``SReachRequest``) and each group is padded to
@@ -26,47 +26,83 @@ Design (the three mechanisms the module exists for):
   is semantically inert (answers past the true count are dropped before
   scatter).  Mixed ``s`` values coalesce into one fused batch: on the
   snapshot path every s-reach answer is ``mr >= s`` off the same join.
+* **Multi-tenant admission** — every request carries ``tenant`` /
+  ``priority`` / ``deadline_ms`` metadata (defaults reproduce the old
+  single-tenant behavior exactly).  The queue is a
+  ``WeightedFairScheduler``: strict priority bands, deficit-weighted
+  round-robin across tenants within a band, deadline-expired requests
+  failed fast with ``DeadlineExceeded``.  A flooding tenant shapes only
+  its own share of each micro-batch, never anyone else's wait.
+* **Streaming delivery** — ``submit_stream()`` yields ``(request,
+  future)`` pairs in *completion* order as micro-batches resolve them,
+  and ``submit(..., on_result=fn)`` invokes a callback the moment one
+  request's answer lands — both are thin layers over the same futures.
 * **Version-keyed snapshot reuse** — the service serves every batch off
   one resident ``DeviceSnapshot`` keyed by ``engine.version``.  After
   ``update()`` the swap happens *between* micro-batches (never mid
-  batch): the admission loop notices ``snap.version != engine.version``,
-  asks the engine for a fresh snapshot — which re-derives **only the
-  dirty label rows** reported by scoped maintenance
-  (``engine.dirty_rows()`` / ``DeviceSnapshot.patch_rows``) — and
-  installs it with a single atomic reference swap.
+  batch): the admission loop notices ``snap.version != engine.version``
+  and asks the engine for ``snapshot_delta()`` — a fresh snapshot plus
+  the dirty-row delta scoped maintenance reported — and installs it
+  with a single atomic reference swap.
 * **Mesh-resident serving** — pass ``mesh=`` and the resident snapshot
   lives sharded over the device mesh (``DeviceSnapshot.to_mesh``).
   After a scoped update, only the dirty rows are re-landed into the
   mesh-resident copy (``to_mesh(base=..., dirty_rows=...)``) instead of
-  re-transferring the whole label mass.
+  re-transferring the whole label mass.  ``repro.serve.replicas``
+  builds read-replica fan-out on the same contract.
 
 Backends with no snapshot form (``online``, ``frontier``, ...) are
 served through their own ``mr_batch`` / ``s_reach_batch`` engines by the
 same admission loop — the service degrades, never refuses.
 
-The request-type table in docs/ARCHITECTURE.md is CI-checked against
-``REQUEST_TYPES`` (tools/check_docs.py).
+The request-type, priority-class, and request-field tables in
+docs/ARCHITECTURE.md are CI-checked against ``REQUEST_TYPES``,
+``PRIORITY_CLASSES``, and the ``Request`` base dataclass
+(tools/check_docs.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import operator
+import queue as queue_mod
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
 from repro.core.engine import SnapshotUnsupported
 from repro.core.query import KernelSnapshot
+from repro.serve.scheduler import (PRIORITY_CLASSES, DeadlineExceeded,
+                                   TenantSpec, WeightedFairScheduler, _Entry)
 
-__all__ = ["MRRequest", "SReachRequest", "ReachabilityService",
-           "ServiceStats", "REQUEST_TYPES"]
+__all__ = ["Request", "MRRequest", "SReachRequest", "ReachabilityService",
+           "ServiceConfig", "ServiceStats", "REQUEST_TYPES",
+           "PRIORITY_CLASSES", "TenantSpec", "DeadlineExceeded"]
 
 
 @dataclasses.dataclass(frozen=True)
-class MRRequest:
+class Request:
+    """Frozen base every service request derives from.  Carries the
+    multi-tenant scheduling metadata; all three fields are keyword-only
+    with defaults that reproduce the pre-multi-tenant behavior exactly
+    (one implicit tenant, one band, no deadline) — ``MRRequest(4, 8)``
+    means what it always meant.
+
+    The field table in docs/ARCHITECTURE.md documents exactly these
+    fields and CI fails if they drift (tools/check_docs.py check 8).
+    """
+
+    tenant: str = dataclasses.field(default="default", kw_only=True)
+    priority: str = dataclasses.field(default="standard", kw_only=True)
+    deadline_ms: Optional[float] = dataclasses.field(default=None,
+                                                     kw_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class MRRequest(Request):
     """Problem 2: answer ``MR(u, v)`` — resolves to ``int``."""
 
     u: int
@@ -76,7 +112,7 @@ class MRRequest:
 
 
 @dataclasses.dataclass(frozen=True)
-class SReachRequest:
+class SReachRequest(Request):
     """Problem 1: is there an s-walk joining ``u`` and ``v`` — resolves
     to ``bool``.  Requests with different ``s`` coalesce into the same
     fused batch (the snapshot path answers all of them off one join)."""
@@ -88,12 +124,68 @@ class SReachRequest:
     kind = "s_reach"
 
 
-Request = Union[MRRequest, SReachRequest]
-
 # kind -> request class; the serving section of docs/ARCHITECTURE.md
 # documents exactly this table and CI fails if they drift apart
 REQUEST_TYPES: Dict[str, type] = {MRRequest.kind: MRRequest,
                                   SReachRequest.kind: SReachRequest}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Typed service configuration — the one documented way to set
+    serving knobs (``repro.api.serve(h, config=ServiceConfig(...))``).
+
+    Batching: ``max_batch`` (admission cap / largest bucket),
+    ``min_bucket`` (smallest padded shape), ``max_wait_ms`` (coalescing
+    linger; 0 dispatches immediately).
+
+    Placement: ``axes`` (mesh (row, column) axis names for ``to_mesh``),
+    ``use_kernels`` (serve snapshot batches through the Pallas
+    label-join ``KernelSnapshot``; ``None`` inherits the engine flag).
+
+    Scheduling: ``tenants`` (``TenantSpec`` shares; unlisted tenants get
+    ``default_weight``), ``quantum`` (DRR credits per pass — larger
+    means coarser interleaving within a batch, same long-run shares).
+
+    Fan-out: ``replicas`` — when > 1, ``repro.api.serve`` builds a
+    ``ReplicaGroup`` of that many mesh-resident snapshot replicas
+    instead of a single-snapshot service.
+    """
+
+    max_batch: int = 4096
+    min_bucket: int = 8
+    max_wait_ms: float = 0.5
+    axes: Optional[Tuple[str, str]] = None
+    use_kernels: Optional[bool] = None
+    tenants: Tuple[TenantSpec, ...] = ()
+    default_weight: float = 1.0
+    quantum: int = 8
+    replicas: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "max_batch", int(self.max_batch))
+        object.__setattr__(self, "min_bucket", int(self.min_bucket))
+        object.__setattr__(self, "max_wait_ms", float(self.max_wait_ms))
+        object.__setattr__(self, "tenants", tuple(self.tenants))
+        object.__setattr__(self, "quantum", int(self.quantum))
+        object.__setattr__(self, "replicas", int(self.replicas))
+        if (self.max_batch < 1 or self.min_bucket < 1
+                or self.min_bucket > self.max_batch):
+            raise ValueError(
+                f"need 1 <= min_bucket <= max_batch; got min_bucket="
+                f"{self.min_bucket} max_batch={self.max_batch}")
+        for spec in self.tenants:
+            if not isinstance(spec, TenantSpec):
+                raise TypeError(
+                    f"ServiceConfig.tenants entries must be TenantSpec; "
+                    f"got {spec!r}")
+        if not float(self.default_weight) > 0:
+            raise ValueError(
+                f"default_weight must be > 0; got {self.default_weight!r}")
+        if self.quantum < 1:
+            raise ValueError(f"quantum must be >= 1; got {self.quantum}")
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1; got {self.replicas}")
 
 
 @dataclasses.dataclass
@@ -102,9 +194,13 @@ class ServiceStats:
 
     submitted: int = 0
     answered: int = 0
+    expired: int = 0                 # failed fast with DeadlineExceeded
     batches: int = 0
     padded_queries: int = 0          # bucket padding slots dispatched
     bucket_histogram: Dict[int, int] = dataclasses.field(default_factory=dict)
+    tenant_submitted: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tenant_answered: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tenant_expired: Dict[str, int] = dataclasses.field(default_factory=dict)
     snapshot_refreshes: int = 0
     rows_rederived: int = 0          # label rows re-derived across refreshes
     rows_full: int = 0               # rows a from-scratch refresh would cost
@@ -114,7 +210,9 @@ class ServiceStats:
 
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
-        d["bucket_histogram"] = dict(sorted(self.bucket_histogram.items()))
+        for key in ("bucket_histogram", "tenant_submitted",
+                    "tenant_answered", "tenant_expired"):
+            d[key] = dict(sorted(d[key].items()))
         return d
 
 
@@ -142,47 +240,63 @@ class ReachabilityService:
     Args:
       engine: a built engine (``repro.api.build_engine``) — the service
         owns its snapshot lifecycle from here on.
+      config: a ``ServiceConfig``; the typed home of every serving knob
+        (batching, scheduling, placement).  Defaults to
+        ``ServiceConfig()``.
       mesh: optional ``jax.sharding.Mesh``; the resident snapshot is
         kept mesh-sharded (``to_mesh``) and refreshed row-wise after
         scoped updates.  Ignored for backends with no snapshot form.
-      axes: mesh (row, column) axis names forwarded to ``to_mesh``.
-      max_batch: admission cap — at most this many requests fuse into
-        one dispatched batch (also the largest bucket shape).
-      min_bucket: smallest padded batch shape; sub-bucket batches pad up
-        to it so trickle traffic reuses one compiled program.
-      max_wait_ms: how long the background loop lingers after the first
-        pending request to let more arrivals coalesce (the classic
-        batching latency/throughput knob).  0 dispatches immediately.
-      use_kernels: answer snapshot batches through the Pallas label-join
-        kernel (``KernelSnapshot``) instead of the XLA ``batched_mr``
-        program.  ``None`` (default) inherits the engine's own
-        ``use_kernels`` flag, so ``serve(h, backend,
-        use_kernels=True)`` flips both build and serving.  The kernel
-        view shares this service's admission buckets (``min_bucket``),
-        so traffic compiles one kernel program per bucket shape.
       start: start the background admission thread.  With
         ``start=False`` the service is synchronous: call ``drain()`` to
         process everything pending (deterministic; what the tests and
         benchmarks use).
+      axes / max_batch / min_bucket / max_wait_ms / use_kernels: direct
+        overrides of the matching ``config`` field (convenience for
+        call sites tuning one knob; ``None`` = take the config value).
+
+    ``use_kernels=None`` inherits the engine's own ``use_kernels`` flag,
+    so ``serve(h, backend, config=ServiceConfig(use_kernels=True))``
+    flips both build and serving.  The kernel view shares this service's
+    admission buckets (``min_bucket``), so traffic compiles one kernel
+    program per bucket shape.
     """
 
-    def __init__(self, engine, *, mesh=None,
-                 axes: Optional[Tuple[str, str]] = None,
-                 max_batch: int = 4096, min_bucket: int = 8,
-                 max_wait_ms: float = 0.5,
+    # ReplicaGroup flips this; a plain service refuses a replicated
+    # config rather than silently serving one copy
+    _replica_aware = False
+
+    def __init__(self, engine, *, config: Optional[ServiceConfig] = None,
+                 mesh=None, axes: Optional[Tuple[str, str]] = None,
+                 max_batch: Optional[int] = None,
+                 min_bucket: Optional[int] = None,
+                 max_wait_ms: Optional[float] = None,
                  use_kernels: Optional[bool] = None, start: bool = True):
-        if max_batch < 1 or min_bucket < 1 or min_bucket > max_batch:
+        cfg = config if config is not None else ServiceConfig()
+        overrides = {k: v for k, v in (("axes", axes),
+                                       ("max_batch", max_batch),
+                                       ("min_bucket", min_bucket),
+                                       ("max_wait_ms", max_wait_ms),
+                                       ("use_kernels", use_kernels))
+                     if v is not None}
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if cfg.replicas > 1 and not self._replica_aware:
             raise ValueError(
-                f"need 1 <= min_bucket <= max_batch; got min_bucket="
-                f"{min_bucket} max_batch={max_batch}")
+                f"ServiceConfig(replicas={cfg.replicas}) needs replica "
+                f"fan-out — use repro.api.serve (which builds a "
+                f"ReplicaGroup) or repro.serve.replicas.ReplicaGroup "
+                f"directly")
+        self.config = cfg
         self.engine = engine
         self.mesh = mesh
-        self.axes = axes
-        self.max_batch = int(max_batch)
-        self.min_bucket = int(min_bucket)
-        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.axes = cfg.axes
+        self.max_batch = cfg.max_batch
+        self.min_bucket = cfg.min_bucket
+        self.max_wait_s = cfg.max_wait_ms / 1e3
         self._stats = ServiceStats()
-        self._pending: List[Tuple[Request, Future]] = []
+        self._queue = WeightedFairScheduler(
+            cfg.tenants, default_weight=cfg.default_weight,
+            quantum=cfg.quantum)
         self._cv = threading.Condition()
         # serializes dispatch against update(): a micro-batch always runs
         # against one coherent (engine, snapshot) pair, and the snapshot
@@ -192,7 +306,8 @@ class ReachabilityService:
         self._host_snap = None       # the engine-derived snapshot _snap mirrors
         self._snapshot_ok: Optional[bool] = None   # None = not probed yet
         self.use_kernels = (bool(getattr(engine, "use_kernels", False))
-                            if use_kernels is None else bool(use_kernels))
+                            if cfg.use_kernels is None
+                            else bool(cfg.use_kernels))
         self._kernel_snap: Optional[KernelSnapshot] = None
         self._running = False
         self._thread: Optional[threading.Thread] = None
@@ -213,7 +328,8 @@ class ReachabilityService:
 
     def close(self) -> None:
         """Stop the admission thread; everything already submitted is
-        answered first (no future is left unresolved)."""
+        resolved first — answered, or failed with ``DeadlineExceeded``
+        if its deadline passed (no future is left unresolved)."""
         with self._cv:
             self._running = False
             self._cv.notify_all()
@@ -230,9 +346,16 @@ class ReachabilityService:
 
     # -- request admission -------------------------------------------------
 
-    def submit(self, request: Request) -> Future:
+    def submit(self, request: Request, *,
+               on_result: Optional[Callable[[Request, Future], None]] = None,
+               ) -> Future:
         """Enqueue one typed request; returns a ``Future`` resolving to
-        ``int`` (``MRRequest``) or ``bool`` (``SReachRequest``).
+        ``int`` (``MRRequest``) or ``bool`` (``SReachRequest``) — or
+        raising ``DeadlineExceeded`` if ``deadline_ms`` elapses first.
+
+        ``on_result`` is the callback delivery hook: called as
+        ``on_result(request, future)`` the moment this request's future
+        resolves (from the dispatching thread), whatever the outcome.
 
         Validation is the same contract as ``validate_batch`` (integer
         ids in ``[0, n)``) on a scalar fast path — admission is the
@@ -262,15 +385,60 @@ class ReachabilityService:
                     f"{request.s!r}") from None
             if s < 1:
                 raise ValueError(f"s-reachability needs s >= 1; got {s}")
+        if not isinstance(request.tenant, str) or not request.tenant:
+            raise ValueError(
+                f"request tenant must be a non-empty string; got "
+                f"{request.tenant!r}")
+        if request.priority not in PRIORITY_CLASSES:
+            raise ValueError(
+                f"unknown priority class {request.priority!r}; available: "
+                f"{sorted(PRIORITY_CLASSES)}")
+        deadline_ms = None
+        if request.deadline_ms is not None:
+            deadline_ms = float(request.deadline_ms)
+            if not deadline_ms > 0:
+                raise ValueError(
+                    f"deadline_ms must be > 0 (or None); got "
+                    f"{request.deadline_ms!r}")
         fut: Future = Future()
+        if on_result is not None:
+            fut.add_done_callback(
+                lambda f, _cb=on_result, _req=request: _cb(_req, f))
+        now = time.monotonic()
+        expiry = None if deadline_ms is None else now + deadline_ms / 1e3
+        entry = _Entry(request, fut, now, expiry)
         with self._cv:
-            self._pending.append((request, fut))
+            self._queue.push(entry)
             self._stats.submitted += 1
+            t = request.tenant
+            self._stats.tenant_submitted[t] = \
+                self._stats.tenant_submitted.get(t, 0) + 1
             self._cv.notify()
         return fut
 
     def submit_many(self, requests: Sequence[Request]) -> List[Future]:
         return [self.submit(r) for r in requests]
+
+    def submit_stream(self, requests: Iterable[Request],
+                      ) -> Iterator[Tuple[Request, Future]]:
+        """Submit ``requests`` and yield ``(request, resolved_future)``
+        pairs in *completion* order, as micro-batches finish — the
+        long-poll client surface: a consumer iterates and sees each
+        answer the moment its batch lands, not when the whole stream is
+        done.  Futures arrive resolved; a deadline-expired request
+        yields with ``DeadlineExceeded`` set rather than being dropped.
+
+        In synchronous mode (``start=False``) the pending queue is
+        drained inline after submission, so iteration still completes
+        without a background thread."""
+        done: "queue_mod.Queue[Tuple[Request, Future]]" = queue_mod.Queue()
+        pairs = [(r, self.submit(
+            r, on_result=lambda req, fut, _q=done: _q.put((req, fut))))
+            for r in requests]
+        if not self._running:
+            self.drain()
+        for _ in range(len(pairs)):
+            yield done.get()
 
     def mr(self, u: int, v: int) -> Future:
         return self.submit(MRRequest(int(u), int(v)))
@@ -326,72 +494,110 @@ class ReachabilityService:
         with self._dispatch_lock:
             return dataclasses.replace(
                 self._stats,
-                bucket_histogram=dict(self._stats.bucket_histogram))
+                bucket_histogram=dict(self._stats.bucket_histogram),
+                tenant_submitted=dict(self._stats.tenant_submitted),
+                tenant_answered=dict(self._stats.tenant_answered),
+                tenant_expired=dict(self._stats.tenant_expired))
 
     def pending(self) -> int:
         with self._cv:
-            return len(self._pending)
+            return len(self._queue)
+
+    def backlog(self) -> Dict[str, int]:
+        """Pending request count per tenant."""
+        with self._cv:
+            return self._queue.backlog()
 
     # -- admission loop ----------------------------------------------------
 
     def _loop(self) -> None:
         while True:
             with self._cv:
-                while self._running and not self._pending:
+                while self._running and not len(self._queue):
                     self._cv.wait(timeout=0.05)
-                if not self._running and not self._pending:
+                if not self._running and not len(self._queue):
                     return
                 # linger for the full coalescing window (each submit()
                 # notify wakes the wait, so loop until the deadline or a
                 # full batch) — the latency/throughput admission knob
                 deadline = time.monotonic() + self.max_wait_s
                 while (self._running
-                        and len(self._pending) < self.max_batch):
+                        and len(self._queue) < self.max_batch):
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         break
                     self._cv.wait(timeout=remaining)
-                batch = self._pending[:self.max_batch]
-                del self._pending[:len(batch)]
+                batch, expired = self._queue.take(self.max_batch,
+                                                  time.monotonic())
+            self._fail_expired(expired)
             if batch:
                 self._dispatch(batch)
 
-    def drain(self) -> int:
-        """Synchronously dispatch everything pending in the caller's
-        thread; returns the number of requests answered.  This is the
-        deterministic serving mode (``start=False``)."""
+    def drain(self, max_batches: Optional[int] = None) -> int:
+        """Synchronously dispatch pending requests in the caller's
+        thread; returns the number of requests resolved (answered or
+        deadline-failed).  This is the deterministic serving mode
+        (``start=False``).  ``max_batches`` bounds the number of
+        micro-batches taken — the fairness tests step one batch at a
+        time to observe its composition."""
         total = 0
-        while True:
+        batches = 0
+        while max_batches is None or batches < max_batches:
             with self._cv:
-                batch = self._pending[:self.max_batch]
-                del self._pending[:len(batch)]
-            if not batch:
+                batch, expired = self._queue.take(self.max_batch,
+                                                  time.monotonic())
+            self._fail_expired(expired)
+            if not batch and not expired:
                 return total
-            self._dispatch(batch)
-            total += len(batch)
+            if batch:
+                self._dispatch(batch)
+                batches += 1
+            total += len(batch) + len(expired)
+        return total
+
+    def _fail_expired(self, expired: List[_Entry]) -> None:
+        if not expired:
+            return
+        now = time.monotonic()
+        with self._dispatch_lock:
+            self._stats.expired += len(expired)
+            for entry in expired:
+                t = entry.request.tenant
+                self._stats.tenant_expired[t] = \
+                    self._stats.tenant_expired.get(t, 0) + 1
+        for entry in expired:
+            waited_ms = (now - entry.enqueued) * 1e3
+            try:
+                entry.future.set_exception(
+                    DeadlineExceeded(entry.request, waited_ms))
+            except InvalidStateError:
+                pass                 # cancelled while queued: drop quietly
 
     # -- dispatch ----------------------------------------------------------
 
-    def _dispatch(self, batch: List[Tuple[Request, Future]]) -> None:
+    def _dispatch(self, batch: List[_Entry]) -> None:
         try:
             with self._dispatch_lock:
                 snap = self._refresh_snapshot()
-                groups: Dict[str, List[Tuple[Request, Future]]] = {}
-                for req, fut in batch:
-                    groups.setdefault(req.kind, []).append((req, fut))
+                groups: Dict[str, List[_Entry]] = {}
+                for entry in batch:
+                    groups.setdefault(entry.request.kind, []).append(entry)
                 for kind, group in groups.items():
                     self._dispatch_group(kind, group, snap)
                 self._stats.answered += len(batch)
+                for entry in batch:
+                    t = entry.request.tenant
+                    self._stats.tenant_answered[t] = \
+                        self._stats.tenant_answered.get(t, 0) + 1
         except Exception as exc:                       # noqa: BLE001
-            for _, fut in batch:
-                if not fut.done():
-                    fut.set_exception(exc)
+            for entry in batch:
+                if not entry.future.done():
+                    entry.future.set_exception(exc)
 
-    def _dispatch_group(self, kind: str,
-                        group: List[Tuple[Request, Future]], snap) -> None:
+    def _dispatch_group(self, kind: str, group: List[_Entry], snap) -> None:
         q = len(group)
-        us = np.fromiter((r.u for r, _ in group), np.int64, q)
-        vs = np.fromiter((r.v for r, _ in group), np.int64, q)
+        us = np.fromiter((e.request.u for e in group), np.int64, q)
+        vs = np.fromiter((e.request.v for e in group), np.int64, q)
         bucket = _bucket_size(q, self.min_bucket, self.max_batch)
         if bucket > q:
             # pad with a repeat of the first (real, validated) pair —
@@ -410,11 +616,11 @@ class ReachabilityService:
                 mr = np.asarray(snap.mr(us, vs))[:q]
             else:
                 mr = np.asarray(self.engine.mr_batch(us, vs))[:q]
-            for (_, fut), val in zip(group, mr):
-                _resolve(fut, int(val))
+            for entry, val in zip(group, mr):
+                _resolve(entry.future, int(val))
             return
 
-        svals = np.fromiter((r.s for r, _ in group), np.int64, q)
+        svals = np.fromiter((e.request.s for e in group), np.int64, q)
         if snap is not None:
             # one fused join answers every s at once: s_reach == mr >= s
             ok = np.asarray(snap.mr(us, vs))[:q] >= svals
@@ -424,8 +630,8 @@ class ReachabilityService:
                 self.engine.s_reach_batch(us, vs, int(svals[0])))[:q]
         else:
             ok = np.asarray(self.engine.mr_batch(us, vs))[:q] >= svals
-        for (_, fut), val in zip(group, ok):
-            _resolve(fut, bool(val))
+        for entry, val in zip(group, ok):
+            _resolve(entry.future, bool(val))
 
     # -- snapshot lifecycle ------------------------------------------------
 
@@ -438,18 +644,12 @@ class ReachabilityService:
             return None
         if self._snap is not None and self._snap.version == eng.version:
             return self._serving_view()
-        # capture the dirty set *before* snapshot() resets it: it is the
-        # row delta between the engine's cached snapshot and the fresh
-        # one — valid for patching our resident copy only if our copy
-        # was landed from exactly that cached object (a direct
-        # engine.snapshot()/mr_batch call by someone else re-derives and
-        # resets the delta, in which case we must re-land in full)
         prev_host = self._host_snap
-        dirty = (eng.dirty_rows()
-                 if prev_host is not None
-                 and eng.snapshot_cache() is prev_host else None)
         try:
-            host = eng.snapshot()
+            # the fan-out hook: fresh snapshot + the row delta relative
+            # to prev_host (None if the delta is unknowable and we must
+            # re-land in full)
+            host, dirty = eng.snapshot_delta(prev_host)
         except SnapshotUnsupported:
             self._snapshot_ok = False
             return None

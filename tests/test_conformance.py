@@ -20,8 +20,8 @@ import tempfile
 import numpy as np
 import pytest
 
-from repro.api import (available_backends, build_engine, serve,
-                       update_capabilities, random_hypergraph,
+from repro.api import (ServiceConfig, available_backends, build_engine,
+                       serve, update_capabilities, random_hypergraph,
                        planted_chain_hypergraph, from_edge_lists)
 from repro.store import load_index, save_index
 from repro.core import MSTOracle, PaddedIndex, apply_edge_edits, build_fast, \
@@ -240,7 +240,9 @@ def test_service_matches_oracle(config):
     if opts.get("_restore"):
         svc = serve(_build(h, config), start=False)
     else:
-        svc = serve(h, backend, start=False, **opts)
+        opts = dict(opts)
+        svc_cfg = ServiceConfig(use_kernels=opts.pop("use_kernels", None))
+        svc = serve(h, backend, start=False, config=svc_cfg, **opts)
     oracle = MSTOracle(h)
     rng = np.random.default_rng(7)
     reqs, want = [], []

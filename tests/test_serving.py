@@ -12,9 +12,9 @@ import time
 import numpy as np
 import pytest
 
-from repro.api import (MRRequest, ReachabilityService, SReachRequest,
-                       available_backends, build_engine, serve,
-                       update_capabilities)
+from repro.api import (MRRequest, ReachabilityService, ServiceConfig,
+                       SReachRequest, available_backends, build_engine,
+                       serve, update_capabilities)
 from repro.core import (MSTOracle, apply_edge_edits,
                         planted_chain_hypergraph, random_hypergraph)
 from repro.core.engine import SnapshotUnsupported, validate_batch
@@ -51,7 +51,7 @@ def test_service_background_thread():
     h = random_hypergraph(25, 35, seed=11)
     rng = np.random.default_rng(0)
     reqs, want = _mixed_requests(h, rng, 120)
-    with serve(h, "hl-index", max_wait_ms=1.0) as svc:
+    with serve(h, "hl-index", config=ServiceConfig(max_wait_ms=1.0)) as svc:
         futs = svc.submit_many(reqs)
         got = [f.result(timeout=60) for f in futs]
     assert got == want
@@ -62,7 +62,7 @@ def test_service_background_thread():
 
 def test_close_answers_everything_submitted():
     h = random_hypergraph(20, 30, seed=5)
-    svc = serve(h, "hl-index", max_wait_ms=5.0)
+    svc = serve(h, "hl-index", config=ServiceConfig(max_wait_ms=5.0))
     futs = [svc.mr(0, i % h.n) for i in range(50)]
     svc.close()
     assert all(f.done() for f in futs)
@@ -87,7 +87,8 @@ def test_bucket_size_policy():
 
 def test_bucketing_bounds_dispatch_shapes():
     h = random_hypergraph(30, 45, seed=3)
-    svc = serve(h, "hl-index", start=False, min_bucket=8, max_batch=64)
+    svc = serve(h, "hl-index", start=False,
+                config=ServiceConfig(min_bucket=8, max_batch=64))
     rng = np.random.default_rng(1)
     oracle = MSTOracle(h)
     futs = []
@@ -147,7 +148,8 @@ def test_kernel_serving_byte_identical_under_churn(backend):
     rng = np.random.default_rng(11)
     h = random_hypergraph(20, 16, seed=8)
     host = serve(h, backend, start=False)
-    kern = serve(h, backend, start=False, use_kernels=True)
+    kern = serve(h, backend, start=False,
+                 config=ServiceConfig(use_kernels=True))
     for _ in range(3):
         ins, dels = [], []
         if h.m > 2 and rng.random() < 0.6:
@@ -180,7 +182,8 @@ def test_kernel_serving_mesh_reland_byte_identical():
     mesh = default_line_graph_mesh()
     h = planted_chain_hypergraph(4, 8, overlap=2, extra_size=2, seed=1)
     host = serve(h, "hl-index", mesh=mesh, start=False)
-    kern = serve(h, "hl-index", mesh=mesh, start=False, use_kernels=True)
+    kern = serve(h, "hl-index", mesh=mesh, start=False,
+                 config=ServiceConfig(use_kernels=True))
     rng = np.random.default_rng(13)
     for step in range(3):
         v0 = int(h.edge(0)[0])
@@ -358,7 +361,8 @@ def test_admission_window_coalesces_trickle_arrivals():
     # the coalescing wait must survive per-submit notifies: requests
     # trickling in during the window end up in one batch, not many
     h = random_hypergraph(15, 20, seed=0)
-    svc = serve(h, "hl-index", max_wait_ms=400.0, max_batch=64)
+    svc = serve(h, "hl-index",
+                config=ServiceConfig(max_wait_ms=400.0, max_batch=64))
     try:
         futs = []
         for _ in range(10):
@@ -477,7 +481,8 @@ def test_mesh_service_on_sharded_backend_reuses_resident_snapshot():
 
 def test_serve_facade():
     h = random_hypergraph(15, 20, seed=2)
-    svc = serve(h, "hl-index", start=False, max_batch=32, min_bucket=4)
+    svc = serve(h, "hl-index", start=False,
+                config=ServiceConfig(max_batch=32, min_bucket=4))
     assert svc.max_batch == 32 and svc.min_bucket == 4
     assert svc.engine.name == "hl-index"
     eng = build_engine(h, "online")

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Seven checks, so documentation cannot silently drift from the code:
+Eight checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -34,6 +34,14 @@ Seven checks, so documentation cannot silently drift from the code:
    the live `repro.kernels.KERNEL_REGISTRY` both ways — name, oracle,
    and compute unit; shipping a Pallas kernel without a doc row, or
    documenting one the registry does not have, fails the build.
+8. The "Multi-tenant serving" section of docs/ARCHITECTURE.md matches
+   the live scheduling surface both ways: its priority-class table
+   (rows ``| `interactive` | 0 | ... |``) against
+   `repro.serve.scheduler.PRIORITY_CLASSES` (names and band numbers),
+   and its request-field table (rows ``| `tenant` | `str` |
+   `"default"` | ... |``) against `dataclasses.fields(Request)` (names
+   and defaults) — adding a priority class or a request metadata field
+   without documenting it, or vice versa, fails the build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -61,6 +69,19 @@ _FORMAT_ROW = re.compile(r"^\|\s*`(\d+)`\s*\|\s*`([\w.-]+)`\s*\|", re.M)
 # a `*_ref` second cell is unique to the kernel-capability table
 _KERNEL_ROW = re.compile(
     r"^\|\s*`(\w+)`\s*\|\s*`(\w+_ref)`\s*\|\s*(\w+)\s*\|", re.M)
+# the multi-tenant rows are scoped to their section (see _section), so
+# these only need to be unique within it: a bare-integer second cell is
+# the priority-class table, a backticked third cell the field table
+_PRIORITY_ROW = re.compile(r"^\|\s*`(\w+)`\s*\|\s*(\d+)\s*\|", re.M)
+_FIELD_ROW = re.compile(
+    r"^\|\s*`(\w+)`\s*\|\s*`[^`]+`\s*\|\s*`([^`]+)`\s*\|", re.M)
+
+
+def _section(text: str, title: str) -> str:
+    """The body of one ``## title`` section (empty if absent)."""
+    match = re.search(rf"^## {re.escape(title)}$(.*?)(?=^## |\Z)",
+                      text, re.M | re.S)
+    return match.group(1) if match else ""
 
 
 def doc_files():
@@ -240,13 +261,72 @@ def check_kernel_table():
     return problems
 
 
+def check_multitenant_section():
+    import dataclasses
+
+    from repro.serve.reach_service import Request
+    from repro.serve.scheduler import PRIORITY_CLASSES
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    body = _section(arch.read_text(), "Multi-tenant serving")
+    if not body:
+        return ["docs/ARCHITECTURE.md has no '## Multi-tenant serving' "
+                "section"]
+    problems = []
+
+    documented_classes = {name: int(band)
+                          for name, band in _PRIORITY_ROW.findall(body)}
+    for name, band in PRIORITY_CLASSES.items():
+        if name not in documented_classes:
+            problems.append(
+                f"docs/ARCHITECTURE.md priority-class table is missing "
+                f"class `{name}` (band {band})")
+        elif documented_classes[name] != band:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents priority class `{name}` "
+                f"as band {documented_classes[name]} but the live "
+                f"PRIORITY_CLASSES says {band}")
+    for name in documented_classes:
+        if name not in PRIORITY_CLASSES:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents priority class `{name}` "
+                f"that the live repro.serve.scheduler.PRIORITY_CLASSES "
+                f"does not have")
+
+    # default shown with double quotes in the docs; repr() uses single
+    documented_fields = {name: default.replace("'", '"')
+                         for name, default in _FIELD_ROW.findall(body)}
+    live_fields = {f.name: repr(f.default).replace("'", '"')
+                   for f in dataclasses.fields(Request)}
+    for name, default in live_fields.items():
+        if name not in documented_fields:
+            problems.append(
+                f"docs/ARCHITECTURE.md request-field table is missing the "
+                f"`{name}` (default {default}) row")
+        elif documented_fields[name] != default:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents request field `{name}` "
+                f"with default {documented_fields[name]} but the live "
+                f"Request dataclass says {default}")
+    for name in documented_fields:
+        if name not in live_fields:
+            problems.append(
+                f"docs/ARCHITECTURE.md documents request field `{name}` "
+                f"that the live repro.serve.reach_service.Request does "
+                f"not have")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_backend_table()
                 + check_update_capability_table()
                 + check_request_type_table()
                 + check_construction_table()
                 + check_format_table()
-                + check_kernel_table())
+                + check_kernel_table()
+                + check_multitenant_section())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
@@ -255,6 +335,7 @@ def main() -> int:
     from repro.core.hlindex import CONSTRUCTION_MODES
     from repro.kernels import KERNEL_REGISTRY
     from repro.serve.reach_service import REQUEST_TYPES
+    from repro.serve.scheduler import PRIORITY_CLASSES
     from repro.store import FORMAT_REGISTRY
     print(f"docs OK: links resolve in {len(doc_files())} files; "
           f"backend table covers {available_backends()}; update "
@@ -262,7 +343,8 @@ def main() -> int:
           f"match {sorted(REQUEST_TYPES)}; construction modes match "
           f"{sorted(CONSTRUCTION_MODES)}; on-disk formats match "
           f"{FORMAT_REGISTRY}; kernel table matches "
-          f"{sorted(KERNEL_REGISTRY)}")
+          f"{sorted(KERNEL_REGISTRY)}; multi-tenant section matches "
+          f"{PRIORITY_CLASSES} and the Request metadata fields")
     return 0
 
 
