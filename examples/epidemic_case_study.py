@@ -1,33 +1,18 @@
 """Epidemic case study (paper Exp-5 / Fig. 4): co-location hypergraph,
-risk quantification by max-reachability, transmission-chain display.
+risk quantification by max-reachability — now told through the workload
+subsystem (``repro.workloads``): contact-tracing chains come from
+witness extraction, spread horizons from hop-bounded s-reach and the
+landmark s-distance oracle, superspreaders from top-k ranking, and
+cohort risk from set-to-set MR.  Every headline number is asserted
+against the brute-force references, so the story doubles as a check.
 
   PYTHONPATH=src python examples/epidemic_case_study.py
 """
 import numpy as np
 
-from repro.core import (colocation_hypergraph, build_fast, minimize,
-                        PaddedIndex, MSTOracle)
-
-
-def transmission_chain(h, mst: MSTOracle, e_from: int, e_to: int):
-    """Reconstruct the bottleneck walk between two co-location events via
-    the maximum-spanning-forest path (maximin-path identity)."""
-    parent = {e_from: None}
-    stack = [e_from]
-    while stack:
-        x = stack.pop()
-        if x == e_to:
-            break
-        for y, w in mst.adj[x]:
-            if y not in parent:
-                parent[y] = x
-                stack.append(y)
-    if e_to not in parent:
-        return []
-    path = [e_to]
-    while parent[path[-1]] is not None:
-        path.append(parent[path[-1]])
-    return path[::-1]
+from repro.api import build_engine, colocation_hypergraph, verify_witness
+from repro.core import (brute_force_mr_set, brute_force_s_distance,
+                        brute_force_s_reach_k, brute_force_top_s, MSTOracle)
 
 
 def main():
@@ -35,43 +20,75 @@ def main():
     h = colocation_hypergraph(n_people=400, n_places=12, n_days=21,
                               p_checkin=0.03, seed=3)
     print(f"co-location hypergraph: {h.n} people, {h.m} (place, day) groups")
-    idx = minimize(build_fast(h))
-    pidx = PaddedIndex(idx)
+    eng = build_engine(h, "hl-index")
+    oracle = MSTOracle(h)        # brute-force cross-check for point MR
 
     patient_zero = int(np.argmax(h.vertex_degrees))
     everyone = np.arange(h.n)
-    risk = np.asarray(pidx.mr(np.full(h.n, patient_zero), everyone))
-    order = np.argsort(-risk)
-    order = order[order != patient_zero]
-
+    risk = np.asarray(eng.mr_batch(np.full(h.n, patient_zero), everyone))
     print(f"\nindex case: person {patient_zero} "
           f"({h.degree(patient_zero)} check-ins)")
-    print("highest-risk contacts (MR = strength of potential "
-          "transmission chain):")
-    for p in order[:8]:
-        print(f"  person {int(p):4d}  MR = {int(risk[p])}")
-    hist = {int(s): int((risk[everyone != patient_zero] == s).sum())
-            for s in np.unique(risk)}
-    print("risk histogram {MR: count}:", hist)
 
-    # show one concrete chain to the top contact
+    # -- contact tracing: witness walks name the actual venues ------------
+    # MR says *how strong* a transmission chain is; the witness walk says
+    # *which (place, day) groups* realize it — the actionable artifact.
+    order = np.argsort(-risk)
+    order = order[order != patient_zero]
+    # top contacts share a venue directly; a mid-risk contact shows a
+    # genuine multi-gathering chain
+    mid = int(order[np.searchsorted(-risk[order], -3)])
+    print("\ncontact-tracing chains (top-risk and one mid-risk contact):")
+    for p in [*order[:3], mid]:
+        w = eng.mr_witness(patient_zero, int(p))
+        assert verify_witness(h, w)            # walk is a valid s-walk
+        assert w.s == oracle.mr(patient_zero, int(p))
+        hops = " -> ".join(f"group {e}" for e in w.walk)
+        print(f"  person {int(p):4d}  MR = {w.s}  via {hops}")
+
+    # -- spread horizon: how fast can infection arrive? -------------------
+    # s_reach_k bounds the walk length: "reachable within k gatherings".
+    s = 2
     top = int(order[0])
-    mst = MSTOracle(h)
-    best = (0, None, None)
-    for eu in h.edges_of(patient_zero):
-        for ev in h.edges_of(top):
-            v = mst.edge_mr(int(eu), int(ev))
-            if v > best[0]:
-                best = (v, int(eu), int(ev))
-    s, e_from, e_to = best
-    chain = transmission_chain(h, mst, e_from, e_to)
-    print(f"\nstrongest chain person {patient_zero} -> person {top} "
-          f"(MR = {s}):")
-    for a, b in zip(chain, chain[1:]):
-        print(f"  group {a} -> group {b}: {h.overlap(a, b)} shared people")
-    if len(chain) == 1:
-        print(f"  single shared group {chain[0]} "
-              f"({h.edge_size(chain[0])} people)")
+    horizon = next(k for k in range(1, h.m + 1)
+                   if eng.s_reach_k(patient_zero, top, s, k))
+    assert brute_force_s_reach_k(h, patient_zero, top, s, horizon)
+    assert not brute_force_s_reach_k(h, patient_zero, top, s, horizon - 1)
+    print(f"\nspread horizon (s = {s}): person {top} is reachable in "
+          f"{horizon} gathering(s), not fewer")
+
+    # the landmark oracle serves certified upper bounds on that horizon
+    # for the whole population at once — bound >= exact, zero iff zero
+    do = eng.distance_oracle(s)
+    sample = [int(p) for p in order[:5]]
+    print(f"landmark s-distance bounds ({do.num_landmarks} landmarks):")
+    for p in sample:
+        bound = eng.s_distance(patient_zero, p, s)
+        exact = brute_force_s_distance(h, patient_zero, p, s)
+        assert (bound == 0) == (exact == 0) and bound >= exact
+        print(f"  person {p:4d}  <= {bound} gatherings (exact {exact})")
+
+    # -- superspreaders: top-k strongest-s ranking ------------------------
+    print("\ntop-5 superspreader contacts of the index case:")
+    verts, vals = eng.top_s(patient_zero, 5)
+    bv, bs = brute_force_top_s(h, patient_zero, 5)
+    assert np.array_equal(verts, bv) and np.array_equal(vals, bs)
+    for p, v in zip(verts.tolist(), vals.tolist()):
+        print(f"  person {p:4d}  MR = {v}")
+
+    # -- cohort risk: set-to-set MR ---------------------------------------
+    # "does the infected household threaten the care-home cohort?" is one
+    # mr_set call — a batched label join, not |U| x |V| point queries
+    household = [patient_zero] + [int(p) for p in order[:2]]
+    cohort = [int(p) for p in order[-20:]]
+    link = eng.mr_set(np.asarray(household), np.asarray(cohort))
+    assert link == brute_force_mr_set(h, household, cohort)
+    print(f"\nhousehold {household} -> {len(cohort)}-person cohort: "
+          f"strongest cross link MR = {link}")
+
+    hist = {int(t): int((risk[everyone != patient_zero] == t).sum())
+            for t in np.unique(risk)}
+    print("risk histogram {MR: count}:", hist)
+    print("\nall workload answers verified against brute force")
 
 
 if __name__ == "__main__":

@@ -71,6 +71,24 @@ dirty label rows fan out to the replicas:
     svc.submit(MRRequest(4, 8, tenant="dashboard",
                          priority="interactive", deadline_ms=50.0))
 
+Beyond point mr/s-reach, the engines answer five *workload* query
+families (``repro.workloads``; per-backend support in
+``workload_capabilities()``, unsupported ops raise
+``WorkloadUnsupported``):
+
+    eng.mr_witness(u, v)             # Witness: the hyperedge walk itself
+    eng.s_reach_k(u, v, s, k)        # s-walk of <= k hyperedges?
+    eng.mr_set(us, vs)               # set-to-set max MR (batched join)
+    eng.mr_from_set(us, targets)     # multi-source MR per target
+    eng.top_s(u, k)                  # k strongest-s neighbors of u
+    eng.s_distance(u, v, s)          # certified landmark upper bound
+
+The same families serve as typed requests (``WitnessRequest``,
+``SReachKRequest``, ``MRSetRequest``, ``TopSRequest``,
+``SDistanceRequest``) through ``serve()`` — same tenant/priority/
+deadline metadata, own dispatch groups, refused at admission when the
+backend lacks the capability.
+
 Multi-device serving goes through the same two calls — build a mesh and
 pass it:
 
@@ -111,21 +129,26 @@ import warnings
 from repro.compat import make_mesh
 from repro.core.engine import (ReachabilityEngine, DeviceSnapshot,
                                SnapshotUnsupported, UpdateUnsupported,
+                               WorkloadUnsupported, WORKLOAD_OPS,
                                available_backends, update_capabilities,
-                               plan_backend, register_backend,
-                               validate_batch)
+                               workload_capabilities, plan_backend,
+                               register_backend, validate_batch)
 from repro.core.engine import build as build_engine
 from repro.core.hypergraph import (Hypergraph, from_edge_lists, compact,
                                    random_hypergraph,
                                    planted_chain_hypergraph,
                                    colocation_hypergraph, paper_figure1)
-from repro.serve.reach_service import (MRRequest, ReachabilityService,
-                                       Request, ServiceConfig, SReachRequest)
+from repro.serve.reach_service import (MRRequest, MRSetRequest,
+                                       ReachabilityService, Request,
+                                       SDistanceRequest, ServiceConfig,
+                                       SReachKRequest, SReachRequest,
+                                       TopSRequest, WitnessRequest)
 from repro.serve.replicas import ReplicaGroup
 from repro.serve.scheduler import (PRIORITY_CLASSES, DeadlineExceeded,
                                    TenantSpec)
 from repro.store import (IndexStore, load_index, read_hif, save_index,
                          write_hif)
+from repro.workloads import DistanceOracle, Witness, verify_witness
 
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
@@ -135,6 +158,11 @@ __all__ = [
     "ReachabilityService", "ReplicaGroup", "serve", "ServiceConfig",
     "TenantSpec", "PRIORITY_CLASSES", "DeadlineExceeded",
     "Request", "MRRequest", "SReachRequest",
+    # workload surface: one pinned set — engine capabilities, request
+    # kinds, and the answer/verification types
+    "WorkloadUnsupported", "WORKLOAD_OPS", "workload_capabilities",
+    "WitnessRequest", "SReachKRequest", "MRSetRequest", "TopSRequest",
+    "SDistanceRequest", "Witness", "verify_witness", "DistanceOracle",
     "Hypergraph", "from_edge_lists", "compact", "random_hypergraph",
     "planted_chain_hypergraph", "colocation_hypergraph", "paper_figure1",
     "IndexStore", "save_index", "load_index", "read_hif", "write_hif",

@@ -24,14 +24,18 @@ from .semiring import (maxmin_matmul, maxmin_closure, boolean_closure,
                        threshold_closure_mr, mr_matrix, mr_oracle_dense,
                        vertex_mr_from_edge_mr, distinct_thresholds)
 from .baselines import (vtv_query, ETEIndex, build_ete,
-                        ThresholdComponentIndex, MSTOracle, line_graph_edges)
+                        ThresholdComponentIndex, MSTOracle, line_graph_edges,
+                        brute_force_s_distance, brute_force_s_reach_k,
+                        brute_force_witness, brute_force_mr_set,
+                        brute_force_mr_from_set, brute_force_top_s)
 from .maintenance import (insert_hyperedge, delete_hyperedge, apply_updates,
                           component_of)
 from .frontier import (SparseLineGraph, frontier_batched_s_reach,
                        frontier_batched_mr)
 from .engine import (ReachabilityEngine, DeviceSnapshot, SnapshotUnsupported,
-                     UpdateUnsupported, register_backend, available_backends,
-                     update_capabilities, plan_backend)
+                     UpdateUnsupported, WorkloadUnsupported, WORKLOAD_OPS,
+                     register_backend, available_backends,
+                     update_capabilities, workload_capabilities, plan_backend)
 from .engine import build as build_engine
 
 __all__ = [
@@ -48,11 +52,16 @@ __all__ = [
     "vertex_mr_from_edge_mr", "distinct_thresholds",
     "vtv_query", "ETEIndex", "build_ete", "ThresholdComponentIndex",
     "MSTOracle", "line_graph_edges",
+    "brute_force_s_distance", "brute_force_s_reach_k",
+    "brute_force_witness", "brute_force_mr_set",
+    "brute_force_mr_from_set", "brute_force_top_s",
     "insert_hyperedge", "delete_hyperedge", "apply_updates", "component_of",
     "SparseLineGraph", "frontier_batched_s_reach", "frontier_batched_mr",
     "ReachabilityEngine", "DeviceSnapshot", "SnapshotUnsupported",
-    "UpdateUnsupported", "register_backend", "available_backends",
-    "update_capabilities", "plan_backend", "build_engine",
+    "UpdateUnsupported", "WorkloadUnsupported", "WORKLOAD_OPS",
+    "register_backend", "available_backends",
+    "update_capabilities", "workload_capabilities", "plan_backend",
+    "build_engine",
 ]
 
 

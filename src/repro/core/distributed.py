@@ -43,7 +43,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
-from .engine import _EngineBase, register_backend, validate_batch
+from .engine import (WORKLOAD_OPS, _EngineBase, register_backend,
+                     validate_batch)
 from .hlindex import HLIndex, build_sharded
 from .minimal import minimize
 from .query import DeviceSnapshot, mr_query, s_reach_query
@@ -327,6 +328,11 @@ class ShardedEngine(_EngineBase):
 
     name = "sharded"
     update_capability = "rebuild"
+    # closure/label rows serve the label-row reductions; the host graph
+    # is maintained under updates, so the traversal ops run too — same
+    # capability shape as the single-device closure backend
+    workload_capability = frozenset(WORKLOAD_OPS)
+    _gate_hop_bounded = True
 
     def __init__(self, h, mesh: Mesh, axes: Tuple[str, str],
                  schedule: str, w_star_padded, m_true: int,

@@ -68,10 +68,15 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import (Callable, Dict, List, Optional, Protocol, Tuple,
-                    runtime_checkable)
+from typing import (TYPE_CHECKING, Callable, Dict, FrozenSet, List,
+                    Optional, Protocol, Tuple, runtime_checkable)
 
 import numpy as np
+
+if TYPE_CHECKING:                      # annotation-only; the workload
+    # package imports this module, so the runtime imports are lazy
+    from repro.workloads.base import Witness
+    from repro.workloads.oracle import DistanceOracle
 
 from .hypergraph import Hypergraph, apply_edge_edits
 from .hlindex import (CONSTRUCTION_MODES, HLIndex, build_basic, build_fast,
@@ -89,8 +94,10 @@ from .semiring import mr_matrix, vertex_mr_from_edge_mr
 __all__ = [
     "ReachabilityEngine", "DeviceSnapshot", "KernelSnapshot",
     "SnapshotUnsupported",
-    "UpdateUnsupported", "register_backend", "available_backends",
-    "update_capabilities", "plan_backend", "build", "validate_batch",
+    "UpdateUnsupported", "WorkloadUnsupported", "WORKLOAD_OPS",
+    "register_backend", "available_backends",
+    "update_capabilities", "workload_capabilities", "plan_backend",
+    "build", "validate_batch",
     "HLIndexEngine", "OnlineEngine", "FrontierEngine", "ETEEngine",
     "ThresholdEngine", "MSTOracleEngine", "ClosureEngine",
     "SINGLE_DEVICE_CLOSURE_BUDGET", "CONSTRUCTION_MODES",
@@ -146,6 +153,28 @@ class UpdateUnsupported(NotImplementedError):
     engine via ``build`` instead."""
 
 
+class WorkloadUnsupported(NotImplementedError):
+    """Raised by backends that do not serve a workload op (witness /
+    s_reach_k / mr_set / top_s / s_distance) — see
+    ``workload_capabilities()`` and the capability table in
+    docs/ARCHITECTURE.md."""
+
+
+# canonical workload-op order; docs check 9 and the conformance matrix
+# both pin their tables against exactly this tuple
+WORKLOAD_OPS: Tuple[str, ...] = ("witness", "s_reach_k", "mr_set",
+                                 "top_s", "s_distance")
+
+# capability rule (per backend below): the label-row reductions —
+# witness (hub named by the label join), mr_set, top_s — need a
+# snapshot-capable label/closure form; the traversal ops — s_reach_k,
+# s_distance — need a graph the backend keeps live under updates.  The
+# static Section IV/VII baselines (threshold, mst-oracle) serve the
+# paper's two problems only.
+_LABEL_OPS = frozenset({"witness", "mr_set", "top_s"})
+_TRAVERSAL_OPS = frozenset({"s_reach_k", "s_distance"})
+
+
 # ---------------------------------------------------------------------------
 # Protocol + shared scaffolding
 # ---------------------------------------------------------------------------
@@ -177,10 +206,28 @@ class ReachabilityEngine(Protocol):
       ``update_capability`` ∈ {"scoped", "incremental", "rebuild",
       "unsupported"} declares how; ``version`` counts successful updates
       so snapshot staleness is detectable.
+
+    Workload ops (``src/repro/workloads/``) — each gated by
+    ``workload_capability`` (the set of ``WORKLOAD_OPS`` the backend
+    serves; anything else raises ``WorkloadUnsupported``), each pinned
+    against the brute-force references in ``core.baselines``:
+
+    * ``mr_witness(u, v) -> Witness`` — the MR answer plus the
+      hyperedge walk achieving it.
+    * ``s_reach_k(u, v, s, k) -> bool`` — an s-walk of at most ``k``
+      hyperedges exists.
+    * ``mr_set(us, vs) -> int`` / ``mr_from_set(us, targets) ->
+      int array`` — set-to-set / multi-source MR reductions.
+    * ``top_s(u, k) -> (vertices, mr values)`` — the k strongest
+      targets of ``u``, ranked (MR desc, id asc), zeros dropped.
+    * ``s_distance(u, v, s) -> int`` — certified upper bound on the
+      s-distance in hyperedges (0 = provably no s-walk), served off the
+      cached per-``s`` ``distance_oracle(s)`` landmark structure.
     """
 
     name: str
     update_capability: str
+    workload_capability: FrozenSet[str]
 
     def mr(self, u: int, v: int) -> int: ...
     def s_reach(self, u: int, v: int, s: int) -> bool: ...
@@ -188,6 +235,12 @@ class ReachabilityEngine(Protocol):
     def s_reach_batch(self, us, vs, s: int) -> np.ndarray: ...
     def snapshot(self) -> DeviceSnapshot: ...
     def update(self, inserts=(), deletes=()) -> None: ...
+    def mr_witness(self, u: int, v: int) -> "Witness": ...
+    def s_reach_k(self, u: int, v: int, s: int, k: int) -> bool: ...
+    def mr_set(self, us, vs) -> int: ...
+    def mr_from_set(self, us, targets) -> np.ndarray: ...
+    def top_s(self, u: int, k: int) -> Tuple[np.ndarray, np.ndarray]: ...
+    def s_distance(self, u: int, v: int, s: int) -> int: ...
 
 
 class _EngineBase:
@@ -200,6 +253,13 @@ class _EngineBase:
 
     name = "base"
     update_capability = "unsupported"
+    # which WORKLOAD_OPS this backend serves (see the rule above the
+    # registry); empty = the paper's two problems only
+    workload_capability: FrozenSet[str] = frozenset()
+    # index lookups cheap enough that s_reach_k pre-gates the bounded
+    # BFS on an unbounded reachability answer (label join / closure
+    # row); False where s_reach is itself a traversal
+    _gate_hop_bounded = False
 
     def __init__(self, h: Hypergraph):
         self.h = h
@@ -215,6 +275,9 @@ class _EngineBase:
         # snapshot-serving backends' ``build(use_kernels=True)``
         self.use_kernels = False
         self._kernel_view: Optional[KernelSnapshot] = None
+        # per-(s, extra_landmarks) DistanceOracle cache; invalidated on
+        # every graph change (_graph_changed)
+        self._distance_oracles: Dict[Tuple[int, int], "DistanceOracle"] = {}
 
     @classmethod
     def build(cls, h: Hypergraph, **opts) -> "ReachabilityEngine":
@@ -290,6 +353,7 @@ class _EngineBase:
         nothing)."""
         self.h = new_h
         self.version += 1
+        self._distance_oracles.clear()   # landmark BFS trees are per-graph
         if dirty_rows is None:
             self._dirty_rows = None
             if getattr(self, "_snap", None) is not None:
@@ -379,6 +443,122 @@ class _EngineBase:
             f"backend {self.name!r} has no padded device form; query it "
             f"through mr_batch / s_reach_batch instead")
 
+    # -- workload ops (src/repro/workloads/) -------------------------------
+
+    def _require_workload(self, op: str) -> None:
+        if op not in self.workload_capability:
+            raise WorkloadUnsupported(
+                f"backend {self.name!r} does not serve workload op "
+                f"{op!r}; see workload_capabilities()")
+
+    def _witness_hub(self, u: int, v: int, k: int) -> Optional[int]:
+        """The hyperedge the label join met at, when the backend's
+        structure names one (HL-index labels); None lets the extractor
+        meet wherever the frontiers touch (closure backends, where
+        every hyperedge is a hub)."""
+        return None
+
+    def mr_witness(self, u: int, v: int) -> "Witness":
+        """MR(u, v) plus the hyperedge walk achieving it (hub-anchored
+        meet-in-the-middle reconstruction; ``verify_witness`` checks
+        the result from the hypergraph alone)."""
+        self._require_workload("witness")
+        from repro.workloads.base import Witness
+        from repro.workloads.witness import extract_witness
+        self._check_vertex_ids(u, v)
+        u, v = int(u), int(v)
+        k = int(self.mr(u, v))
+        walk = (extract_witness(self.h, u, v, k,
+                                hub=self._witness_hub(u, v, k))
+                if k > 0 else ())
+        return Witness(u=u, v=v, s=k, walk=tuple(int(e) for e in walk))
+
+    def s_reach_k(self, u: int, v: int, s: int, k: int) -> bool:
+        """Hop-bounded s-reach: an s-walk of at most ``k`` hyperedges.
+        Index-backed engines pre-gate the bounded search: unbounded
+        unreachable rejects immediately, and ``k >= m`` accepts
+        immediately (shortest s-walks never repeat a hyperedge)."""
+        self._require_workload("s_reach_k")
+        self._check_vertex_ids(u, v)
+        u, v, s, k = int(u), int(v), int(s), int(k)
+        if s < 1:
+            raise ValueError(f"s-reachability needs s >= 1; got {s}")
+        if k < 1:
+            raise ValueError(f"hop bound needs k >= 1; got {k}")
+        if self._gate_hop_bounded:
+            if not self.s_reach(u, v, s):
+                return False             # early-reject: no walk at all
+            if k >= self.h.m:
+                return True              # early-accept: m edges suffice
+        return self._bounded_s_reach(u, v, s, k)
+
+    def _bounded_s_reach(self, u: int, v: int, s: int, k: int) -> bool:
+        """Backend hook behind the gate: host bounded BFS by default;
+        the frontier backend swaps in its jitted sweep."""
+        from repro.workloads.hop_bounded import hop_bounded_s_reach
+        return bool(hop_bounded_s_reach(self.h, u, v, s, k))
+
+    def mr_set(self, us, vs) -> int:
+        """Set-to-set MR: ``max over U x V of MR(u, v)``, answered as
+        one cross-product batch through ``mr_batch`` — the vectorized
+        snapshot join, kernel-path eligible like any other batch."""
+        self._require_workload("mr_set")
+        from repro.workloads.setops import cross_pairs, normalize_vertex_set
+        sources = normalize_vertex_set(us, self.h.n, "mr_set source set")
+        targets = normalize_vertex_set(vs, self.h.n, "mr_set target set")
+        qu, qv = cross_pairs(sources, targets)
+        return int(np.asarray(self.mr_batch(qu, qv)).max())
+
+    def mr_from_set(self, us, targets) -> np.ndarray:
+        """Multi-source MR: per target, the best MR from any source
+        (``targets`` keeps caller order and duplicates)."""
+        self._require_workload("mr_set")
+        from repro.workloads.setops import cross_pairs, normalize_vertex_set
+        sources = normalize_vertex_set(us, self.h.n, "mr_from_set sources")
+        tgt, _ = validate_batch(targets, targets, self.h.n)
+        qu, qv = cross_pairs(sources, tgt)
+        flat = np.asarray(self.mr_batch(qu, qv), np.int64)
+        return flat.reshape(len(sources), len(tgt)).max(axis=0)
+
+    def top_s(self, u: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k strongest-s ranking: the (up to) k vertices with the
+        largest MR(u, .), from one full label-row sweep.  Returns
+        (vertices, mr values) ranked (MR desc, id asc); zeros and ``u``
+        itself never appear."""
+        self._require_workload("top_s")
+        from repro.workloads.topk import select_top_s
+        self._check_vertex_ids(u)
+        if int(k) < 1:
+            raise ValueError(f"top_s needs k >= 1; got {k}")
+        n = self.h.n
+        row = self.mr_batch(np.full(n, int(u), np.int64),
+                            np.arange(n, dtype=np.int64))
+        return select_top_s(np.asarray(row), int(u), int(k))
+
+    def s_distance(self, u: int, v: int, s: int) -> int:
+        """Certified upper bound on the s-distance in hyperedges
+        (0 = provably no s-walk), served off the cached landmark
+        oracle for this ``s``."""
+        self._require_workload("s_distance")
+        self._check_vertex_ids(u, v)
+        return int(self.distance_oracle(int(s)).distance(int(u), int(v)))
+
+    def distance_oracle(self, s: int, *, extra_landmarks: int = 4,
+                        ) -> "DistanceOracle":
+        """The per-``s`` landmark oracle (built on first use, cached
+        until the graph changes)."""
+        self._require_workload("s_distance")
+        if int(s) < 1:
+            raise ValueError(f"s-distance needs s >= 1; got {s}")
+        key = (int(s), int(extra_landmarks))
+        oracle = self._distance_oracles.get(key)
+        if oracle is None:
+            from repro.workloads.oracle import DistanceOracle
+            oracle = DistanceOracle(self.h, int(s),
+                                    extra_landmarks=int(extra_landmarks))
+            self._distance_oracles[key] = oracle
+        return oracle
+
     def block_until_built(self) -> None:
         """Block until any device work dispatched by ``build`` is resident
         (jax dispatch is asynchronous).  Backends whose build is host-side
@@ -421,6 +601,19 @@ def update_capabilities() -> Dict[str, str]:
     """
     return {name: getattr(cls, "update_capability", "unsupported")
             for name, cls in sorted(_REGISTRY.items())}
+
+
+def workload_capabilities() -> Dict[str, Dict[str, bool]]:
+    """Registry key -> {workload op -> served?} in ``WORKLOAD_OPS``
+    order.  The workload-capability table in docs/ARCHITECTURE.md is
+    CI-checked against this both ways (tools/check_docs.py check 9),
+    and the conformance matrix derives its supported/unsupported cells
+    from it."""
+    caps: Dict[str, Dict[str, bool]] = {}
+    for name, cls in sorted(_REGISTRY.items()):
+        served = getattr(cls, "workload_capability", frozenset())
+        caps[name] = {op: op in served for op in WORKLOAD_OPS}
+    return caps
 
 
 def plan_backend(h: Hypergraph, batch_hint: Optional[int] = None, *,
@@ -585,6 +778,8 @@ class HLIndexEngine(_EngineBase):
 
     name = "hl-index"
     update_capability = "scoped"
+    workload_capability = _LABEL_OPS | _TRAVERSAL_OPS
+    _gate_hop_bounded = True
 
     def __init__(self, h: Hypergraph, idx: HLIndex,
                  builder: Callable[[Hypergraph], HLIndex] = build_fast,
@@ -654,6 +849,17 @@ class HLIndexEngine(_EngineBase):
     def s_reach(self, u: int, v: int, s: int) -> bool:
         self._check_vertex_ids(u, v)
         return s_reach_query(self.idx, int(u), int(v), int(s))
+
+    def _witness_hub(self, u: int, v: int, k: int) -> Optional[int]:
+        """The Algorithm-5 join's meeting hub: a hyperedge labeled on
+        both sides with min(s_u, s_v) = k (no label pair can exceed
+        MR, so >= k is the argmax)."""
+        label_v = self.idx.label_dict(v)
+        for e, su in zip(self.idx.labels_edge[u], self.idx.labels_s[u]):
+            sv = label_v.get(int(e))
+            if sv is not None and min(int(su), sv) >= k:
+                return int(e)
+        return None
 
     def mr_batch(self, us, vs) -> np.ndarray:
         us, vs = validate_batch(us, vs, self.h.n)
@@ -755,6 +961,7 @@ class OnlineEngine(_EngineBase):
 
     name = "online"
     update_capability = "incremental"
+    workload_capability = _TRAVERSAL_OPS
 
     def __init__(self, h: Hypergraph, cache: Optional[NeighborCache]):
         super().__init__(h)
@@ -787,6 +994,7 @@ class FrontierEngine(_EngineBase):
 
     name = "frontier"
     update_capability = "incremental"
+    workload_capability = _TRAVERSAL_OPS
 
     def __init__(self, h: Hypergraph, g: SparseLineGraph,
                  rounds: Optional[int]):
@@ -820,6 +1028,12 @@ class FrontierEngine(_EngineBase):
         return frontier_batched_s_reach(self.g, us, vs, int(s),
                                         rounds=self.rounds)
 
+    def _bounded_s_reach(self, u: int, v: int, s: int, k: int) -> bool:
+        # bounded *device* path: a walk of k hyperedges is k - 1
+        # line-graph steps of the jitted frontier sweep
+        return bool(frontier_batched_s_reach(
+            self.g, [u], [v], s, rounds=k - 1)[0])
+
 
 # ---------------------------------------------------------------------------
 # Baseline backends (Section IV / VII structures)
@@ -831,6 +1045,9 @@ class ETEEngine(_EngineBase):
     vertex's incident label lists into the shared padded form."""
 
     name = "ete"
+    # label-row reductions only: the structure is static (updates
+    # unsupported), so the live-traversal ops stay off
+    workload_capability = _LABEL_OPS
 
     def __init__(self, h: Hypergraph, ete: ETEIndex):
         super().__init__(h)
@@ -924,6 +1141,8 @@ class ClosureEngine(_EngineBase):
 
     name = "closure"
     update_capability = "rebuild"
+    workload_capability = _LABEL_OPS | _TRAVERSAL_OPS
+    _gate_hop_bounded = True
 
     def __init__(self, h: Hypergraph, w_star: np.ndarray,
                  method: str = "maxmin"):

@@ -22,6 +22,11 @@ _LAZY = {
     "Request": "reach_service",
     "MRRequest": "reach_service",
     "SReachRequest": "reach_service",
+    "WitnessRequest": "reach_service",
+    "SReachKRequest": "reach_service",
+    "MRSetRequest": "reach_service",
+    "TopSRequest": "reach_service",
+    "SDistanceRequest": "reach_service",
     "ServiceConfig": "reach_service",
     "ServiceStats": "reach_service",
     "REQUEST_TYPES": "reach_service",
@@ -37,9 +42,11 @@ __all__ = sorted(_LAZY)
 
 if TYPE_CHECKING:  # pragma: no cover - static analysis only
     from .kvcache import greedy_decode, prefill_with_decode      # noqa: F401
-    from .reach_service import (MRRequest, ReachabilityService,  # noqa: F401
-                                Request, REQUEST_TYPES, ServiceConfig,
-                                ServiceStats, SReachRequest)
+    from .reach_service import (MRRequest, MRSetRequest,         # noqa: F401
+                                ReachabilityService, Request, REQUEST_TYPES,
+                                SDistanceRequest, ServiceConfig,
+                                ServiceStats, SReachKRequest, SReachRequest,
+                                TopSRequest, WitnessRequest)
     from .replicas import Replica, ReplicaGroup                  # noqa: F401
     from .scheduler import (DeadlineExceeded, PRIORITY_CLASSES,  # noqa: F401
                             TenantSpec, WeightedFairScheduler)

@@ -55,6 +55,15 @@ Backends with no snapshot form (``online``, ``frontier``, ...) are
 served through their own ``mr_batch`` / ``s_reach_batch`` engines by the
 same admission loop — the service degrades, never refuses.
 
+Workload request kinds (``witness`` / ``s_reach_k`` / ``mr_set`` /
+``top_s`` / ``s_distance``, see ``repro.workloads``) ride the same
+admission pipeline: typed frozen requests, the same tenant/priority/
+deadline metadata, and their own per-kind dispatch groups — so workload
+traffic never perturbs the padded mr/s_reach bucket shapes.  Kinds a
+backend cannot serve are refused at *admission* with
+``WorkloadUnsupported`` (checked against ``engine.workload_capability``)
+rather than failing futures later.
+
 The request-type, priority-class, and request-field tables in
 docs/ARCHITECTURE.md are CI-checked against ``REQUEST_TYPES``,
 ``PRIORITY_CLASSES``, and the ``Request`` base dataclass
@@ -73,12 +82,14 @@ from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
 
 import numpy as np
 
-from repro.core.engine import SnapshotUnsupported
+from repro.core.engine import SnapshotUnsupported, WorkloadUnsupported
 from repro.core.query import KernelSnapshot
 from repro.serve.scheduler import (PRIORITY_CLASSES, DeadlineExceeded,
                                    TenantSpec, WeightedFairScheduler, _Entry)
 
-__all__ = ["Request", "MRRequest", "SReachRequest", "ReachabilityService",
+__all__ = ["Request", "MRRequest", "SReachRequest", "WitnessRequest",
+           "SReachKRequest", "MRSetRequest", "TopSRequest",
+           "SDistanceRequest", "ReachabilityService",
            "ServiceConfig", "ServiceStats", "REQUEST_TYPES",
            "PRIORITY_CLASSES", "TenantSpec", "DeadlineExceeded"]
 
@@ -124,10 +135,88 @@ class SReachRequest(Request):
     kind = "s_reach"
 
 
+@dataclasses.dataclass(frozen=True)
+class WitnessRequest(Request):
+    """Workload: MR with proof — resolves to a ``repro.workloads.Witness``
+    whose hyperedge walk realizes ``MR(u, v)`` (empty walk when 0)."""
+
+    u: int
+    v: int
+
+    kind = "witness"
+
+
+@dataclasses.dataclass(frozen=True)
+class SReachKRequest(Request):
+    """Workload: hop-bounded s-reach — is there an s-walk of at most
+    ``k`` hyperedges joining ``u`` and ``v``; resolves to ``bool``."""
+
+    u: int
+    v: int
+    s: int
+    k: int
+
+    kind = "s_reach_k"
+
+
+@dataclasses.dataclass(frozen=True)
+class MRSetRequest(Request):
+    """Workload: set-to-set MR — ``max`` of ``MR(u, v)`` over
+    ``us x vs``; resolves to ``int``.  Vertex sets are stored as tuples
+    so the request stays frozen/hashable."""
+
+    us: Tuple[int, ...]
+    vs: Tuple[int, ...]
+
+    kind = "mr_set"
+
+    def __post_init__(self):
+        object.__setattr__(self, "us", tuple(self.us))
+        object.__setattr__(self, "vs", tuple(self.vs))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopSRequest(Request):
+    """Workload: top-k strongest-s ranking — resolves to a tuple of
+    ``(vertex, mr)`` pairs sorted by descending ``mr`` (ties by vertex
+    id), zeros and ``u`` itself excluded."""
+
+    u: int
+    k: int
+
+    kind = "top_s"
+
+
+@dataclasses.dataclass(frozen=True)
+class SDistanceRequest(Request):
+    """Workload: landmark s-distance — resolves to an ``int`` certified
+    upper bound on the number of hyperedges an s-walk from ``u`` to
+    ``v`` needs (0 = provably no s-walk)."""
+
+    u: int
+    v: int
+    s: int
+
+    kind = "s_distance"
+
+
 # kind -> request class; the serving section of docs/ARCHITECTURE.md
 # documents exactly this table and CI fails if they drift apart
 REQUEST_TYPES: Dict[str, type] = {MRRequest.kind: MRRequest,
-                                  SReachRequest.kind: SReachRequest}
+                                  SReachRequest.kind: SReachRequest,
+                                  WitnessRequest.kind: WitnessRequest,
+                                  SReachKRequest.kind: SReachKRequest,
+                                  MRSetRequest.kind: MRSetRequest,
+                                  TopSRequest.kind: TopSRequest,
+                                  SDistanceRequest.kind: SDistanceRequest}
+
+# workload kinds gate on engine.workload_capability at submit; "mr" and
+# "s_reach" (the padded-bucket kinds) every backend serves
+_KIND_TO_OP: Dict[str, str] = {"witness": "witness",
+                               "s_reach_k": "s_reach_k",
+                               "mr_set": "mr_set",
+                               "top_s": "top_s",
+                               "s_distance": "s_distance"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,12 +295,15 @@ class ServiceStats:
     rows_full: int = 0               # rows a from-scratch refresh would cost
     mesh_rows_patched: int = 0       # rows re-landed into a mesh-resident copy
     kernel_batches: int = 0          # batches answered by the Pallas join
+    workload_answered: Dict[str, int] = dataclasses.field(
+        default_factory=dict)        # per-kind workload answers served
     updates: int = 0
 
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         for key in ("bucket_histogram", "tenant_submitted",
-                    "tenant_answered", "tenant_expired"):
+                    "tenant_answered", "tenant_expired",
+                    "workload_answered"):
             d[key] = dict(sorted(d[key].items()))
         return d
 
@@ -350,8 +442,14 @@ class ReachabilityService:
                on_result: Optional[Callable[[Request, Future], None]] = None,
                ) -> Future:
         """Enqueue one typed request; returns a ``Future`` resolving to
-        ``int`` (``MRRequest``) or ``bool`` (``SReachRequest``) — or
-        raising ``DeadlineExceeded`` if ``deadline_ms`` elapses first.
+        the kind's answer type (``int`` for ``MRRequest`` /
+        ``MRSetRequest`` / ``SDistanceRequest``, ``bool`` for
+        ``SReachRequest`` / ``SReachKRequest``, a ``Witness`` for
+        ``WitnessRequest``, a ``(vertex, mr)`` tuple for
+        ``TopSRequest``) — or raising ``DeadlineExceeded`` if
+        ``deadline_ms`` elapses first.  Workload kinds the backend
+        cannot serve are refused at admission with
+        ``WorkloadUnsupported`` (see ``engine.workload_capability``).
 
         ``on_result`` is the callback delivery hook: called as
         ``on_result(request, future)`` the moment this request's future
@@ -364,27 +462,13 @@ class ReachabilityService:
             raise TypeError(
                 f"expected one of {sorted(REQUEST_TYPES)} requests, got "
                 f"{type(request).__name__}")
-        n = self.engine.h.n
-        try:
-            u = operator.index(request.u)
-            v = operator.index(request.v)
-        except TypeError:
-            raise ValueError(
-                f"request vertex ids must have an integer dtype; got "
-                f"({request.u!r}, {request.v!r})") from None
-        if not 0 <= u < n or not 0 <= v < n:
-            bad = u if not 0 <= u < n else v
-            raise IndexError(
-                f"request vertex id {bad} out of range [0, {n})")
-        if request.kind == "s_reach":
-            try:
-                s = operator.index(request.s)
-            except TypeError:
-                raise ValueError(
-                    f"request s must have an integer dtype; got "
-                    f"{request.s!r}") from None
-            if s < 1:
-                raise ValueError(f"s-reachability needs s >= 1; got {s}")
+        self._validate_fields(request)
+        op = _KIND_TO_OP.get(request.kind)
+        if op is not None and op not in getattr(
+                self.engine, "workload_capability", frozenset()):
+            raise WorkloadUnsupported(
+                f"backend {getattr(self.engine, 'name', '?')!r} does not "
+                f"serve the {op!r} workload")
         if not isinstance(request.tenant, str) or not request.tenant:
             raise ValueError(
                 f"request tenant must be a non-empty string; got "
@@ -416,6 +500,73 @@ class ReachabilityService:
             self._cv.notify()
         return fut
 
+    def _validate_fields(self, request: Request) -> None:
+        """Per-kind query-field validation (the shared tenant/priority/
+        deadline metadata checks stay in ``submit``).  Scalar fast path
+        with the same contract as ``validate_batch``."""
+        n = self.engine.h.n
+        kind = request.kind
+
+        def _vertex(x) -> int:
+            try:
+                i = operator.index(x)
+            except TypeError:
+                raise ValueError(
+                    f"request vertex ids must have an integer dtype; got "
+                    f"{x!r}") from None
+            if not 0 <= i < n:
+                raise IndexError(
+                    f"request vertex id {i} out of range [0, {n})")
+            return i
+
+        def _count(x, name: str) -> int:
+            try:
+                i = operator.index(x)
+            except TypeError:
+                raise ValueError(
+                    f"request {name} must have an integer dtype; got "
+                    f"{x!r}") from None
+            if i < 1:
+                raise ValueError(f"request {name} must be >= 1; got {i}")
+            return i
+
+        if kind == "mr_set":
+            for name, ids in (("us", request.us), ("vs", request.vs)):
+                if not ids:
+                    raise ValueError(
+                        f"mr_set request field {name!r} must be a non-empty "
+                        f"vertex set")
+                for x in ids:
+                    _vertex(x)
+            return
+        if kind == "top_s":
+            _vertex(request.u)
+            _count(request.k, "k")
+            return
+        # every remaining kind is a (u, v) pair query
+        try:
+            u = operator.index(request.u)
+            v = operator.index(request.v)
+        except TypeError:
+            raise ValueError(
+                f"request vertex ids must have an integer dtype; got "
+                f"({request.u!r}, {request.v!r})") from None
+        if not 0 <= u < n or not 0 <= v < n:
+            bad = u if not 0 <= u < n else v
+            raise IndexError(
+                f"request vertex id {bad} out of range [0, {n})")
+        if kind in ("s_reach", "s_reach_k", "s_distance"):
+            try:
+                s = operator.index(request.s)
+            except TypeError:
+                raise ValueError(
+                    f"request s must have an integer dtype; got "
+                    f"{request.s!r}") from None
+            if s < 1:
+                raise ValueError(f"s-reachability needs s >= 1; got {s}")
+        if kind == "s_reach_k":
+            _count(request.k, "k")
+
     def submit_many(self, requests: Sequence[Request]) -> List[Future]:
         return [self.submit(r) for r in requests]
 
@@ -445,6 +596,22 @@ class ReachabilityService:
 
     def s_reach(self, u: int, v: int, s: int) -> Future:
         return self.submit(SReachRequest(int(u), int(v), int(s)))
+
+    def witness(self, u: int, v: int) -> Future:
+        return self.submit(WitnessRequest(int(u), int(v)))
+
+    def s_reach_k(self, u: int, v: int, s: int, k: int) -> Future:
+        return self.submit(SReachKRequest(int(u), int(v), int(s), int(k)))
+
+    def mr_set(self, us: Iterable[int], vs: Iterable[int]) -> Future:
+        return self.submit(MRSetRequest(tuple(int(x) for x in us),
+                                        tuple(int(x) for x in vs)))
+
+    def top_s(self, u: int, k: int) -> Future:
+        return self.submit(TopSRequest(int(u), int(k)))
+
+    def s_distance(self, u: int, v: int, s: int) -> Future:
+        return self.submit(SDistanceRequest(int(u), int(v), int(s)))
 
     def update(self, inserts=(), deletes=()) -> None:
         """Apply hyperedge edits through the engine.  Serving continues:
@@ -497,7 +664,8 @@ class ReachabilityService:
                 bucket_histogram=dict(self._stats.bucket_histogram),
                 tenant_submitted=dict(self._stats.tenant_submitted),
                 tenant_answered=dict(self._stats.tenant_answered),
-                tenant_expired=dict(self._stats.tenant_expired))
+                tenant_expired=dict(self._stats.tenant_expired),
+                workload_answered=dict(self._stats.workload_answered))
 
     def pending(self) -> int:
         with self._cv:
@@ -595,6 +763,9 @@ class ReachabilityService:
                     entry.future.set_exception(exc)
 
     def _dispatch_group(self, kind: str, group: List[_Entry], snap) -> None:
+        if kind in _KIND_TO_OP:
+            self._dispatch_workload_group(kind, group)
+            return
         q = len(group)
         us = np.fromiter((e.request.u for e in group), np.int64, q)
         vs = np.fromiter((e.request.v for e in group), np.int64, q)
@@ -632,6 +803,34 @@ class ReachabilityService:
             ok = np.asarray(self.engine.mr_batch(us, vs))[:q] >= svals
         for entry, val in zip(group, ok):
             _resolve(entry.future, bool(val))
+
+    def _dispatch_workload_group(self, kind: str, group: List[_Entry]) -> None:
+        """Workload kinds dispatch per-request through the engine's
+        workload methods — witness reconstruction and the BFS-gated ops
+        are host-side, while ``mr_set`` / ``top_s`` batch internally
+        through ``mr_batch`` (which serves the kernel path when the
+        engine enables it).  Each kind still arrives as its own group
+        (bucket stream), so workload traffic never perturbs the padded
+        mr/s_reach bucket shapes or their compiled-program count."""
+        eng = self.engine
+        self._stats.batches += 1
+        self._stats.workload_answered[kind] = \
+            self._stats.workload_answered.get(kind, 0) + len(group)
+        for entry in group:
+            r = entry.request
+            if kind == "witness":
+                val = eng.mr_witness(r.u, r.v)
+            elif kind == "s_reach_k":
+                val = bool(eng.s_reach_k(r.u, r.v, r.s, r.k))
+            elif kind == "mr_set":
+                val = int(eng.mr_set(np.asarray(r.us, np.int64),
+                                     np.asarray(r.vs, np.int64)))
+            elif kind == "top_s":
+                verts, vals = eng.top_s(r.u, r.k)
+                val = tuple(zip(verts.tolist(), vals.tolist()))
+            else:                    # s_distance (admission pinned kinds)
+                val = int(eng.s_distance(r.u, r.v, r.s))
+            _resolve(entry.future, val)
 
     # -- snapshot lifecycle ------------------------------------------------
 

@@ -21,13 +21,18 @@ import numpy as np
 import pytest
 
 from repro.api import (ServiceConfig, available_backends, build_engine,
-                       serve, update_capabilities, random_hypergraph,
-                       planted_chain_hypergraph, from_edge_lists)
+                       serve, update_capabilities, workload_capabilities,
+                       random_hypergraph, planted_chain_hypergraph,
+                       from_edge_lists)
 from repro.store import load_index, save_index
-from repro.core import MSTOracle, PaddedIndex, apply_edge_edits, build_fast, \
-    minimize
-from repro.core.engine import SnapshotUnsupported, UpdateUnsupported
+from repro.core import (MSTOracle, PaddedIndex, apply_edge_edits, build_fast,
+                        minimize, brute_force_mr_from_set, brute_force_mr_set,
+                        brute_force_s_distance, brute_force_s_reach_k,
+                        brute_force_top_s)
+from repro.core.engine import (SnapshotUnsupported, UpdateUnsupported,
+                               WorkloadUnsupported, WORKLOAD_OPS)
 from repro.serve.reach_service import MRRequest, SReachRequest
+from repro.workloads import verify_witness
 
 BACKENDS = available_backends()
 
@@ -47,6 +52,21 @@ EXPECTED_UPDATE = {
     "closure": "rebuild", "sharded": "rebuild",
     "ete": "unsupported", "threshold": "unsupported",
     "mst-oracle": "unsupported",
+}
+# workload capability: label ops (witness / mr_set / top_s) need a
+# snapshot-capable label or closure form; traversal ops (s_reach_k /
+# s_distance) need a live maintained graph.  The static Section IV/VII
+# baselines serve neither.
+_ALL_OPS = {op: True for op in WORKLOAD_OPS}
+_NO_OPS = {op: False for op in WORKLOAD_OPS}
+_LABEL_ONLY = dict(_NO_OPS, witness=True, mr_set=True, top_s=True)
+_TRAVERSAL_ONLY = dict(_NO_OPS, s_reach_k=True, s_distance=True)
+EXPECTED_WORKLOADS = {
+    "hl-index": _ALL_OPS, "hl-index-basic": _ALL_OPS,
+    "closure": _ALL_OPS, "sharded": _ALL_OPS,
+    "ete": _LABEL_ONLY,
+    "online": _TRAVERSAL_ONLY, "frontier": _TRAVERSAL_ONLY,
+    "threshold": _NO_OPS, "mst-oracle": _NO_OPS,
 }
 
 # matrix rows: every registered backend under default options, plus the
@@ -104,7 +124,9 @@ def test_matrix_covers_registry_exactly():
     # backend registered without a row here (or vice versa) is loud
     assert set(EXPECTED_SNAPSHOT) == set(BACKENDS)
     assert set(EXPECTED_UPDATE) == set(BACKENDS)
+    assert set(EXPECTED_WORKLOADS) == set(BACKENDS)
     assert update_capabilities() == EXPECTED_UPDATE
+    assert workload_capabilities() == EXPECTED_WORKLOADS
     assert "vtv" not in BACKENDS          # unsound for MR (paper Example 5)
 
 
@@ -226,6 +248,108 @@ def test_op_update(case, config):
     for u, v, w in zip(us2[:8], vs2[:8], want2[:8]):
         assert eng.mr(int(u), int(v)) == int(w)
         assert eng.s_reach(int(u), int(v), 2) == (int(w) >= 2)
+
+
+# ---------------------------------------------------------------------------
+# workload ops ride the same matrix: one row per op × config, answers
+# pinned to the brute-force references; unsupported cells must raise
+# WorkloadUnsupported (asserted, never skipped)
+# ---------------------------------------------------------------------------
+
+def _workload_supported(config, op):
+    return EXPECTED_WORKLOADS[CONFIGS[config][0]][op]
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_witness(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    if not _workload_supported(config, "witness"):
+        with pytest.raises(WorkloadUnsupported):
+            eng.mr_witness(int(us[0]), int(vs[0]))
+        return
+    for u, v, w in zip(us[:10], vs[:10], want[:10]):
+        wit = eng.mr_witness(int(u), int(v))
+        assert wit.u == int(u) and wit.v == int(v)
+        assert wit.s == int(w)                # witness strength == MR
+        assert verify_witness(h, wit)         # walk is a valid s-walk
+    with pytest.raises(IndexError):
+        eng.mr_witness(-1, 0)
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_s_reach_k(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    if not _workload_supported(config, "s_reach_k"):
+        with pytest.raises(WorkloadUnsupported):
+            eng.s_reach_k(int(us[0]), int(vs[0]), 1, 1)
+        return
+    for s in (1, 2):
+        for k in (1, 2, h.m):
+            for u, v in zip(us[:8], vs[:8]):
+                assert eng.s_reach_k(int(u), int(v), s, k) == \
+                    brute_force_s_reach_k(h, int(u), int(v), s, k)
+    with pytest.raises(ValueError):
+        eng.s_reach_k(int(us[0]), int(vs[0]), 0, 1)
+    with pytest.raises(ValueError):
+        eng.s_reach_k(int(us[0]), int(vs[0]), 1, 0)
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_mr_set(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    if not _workload_supported(config, "mr_set"):
+        with pytest.raises(WorkloadUnsupported):
+            eng.mr_set(us[:3], vs[:3])
+        return
+    for a, b in ((6, 6), (1, 12), (12, 1)):
+        U, V = us[:a], vs[:b]
+        assert eng.mr_set(U, V) == brute_force_mr_set(h, U, V)
+    targets = np.arange(h.n)
+    got = np.asarray(eng.mr_from_set(us[:5], targets)).astype(np.int64)
+    np.testing.assert_array_equal(
+        got, brute_force_mr_from_set(h, us[:5], targets))
+    with pytest.raises(ValueError):
+        eng.mr_set(np.array([], np.int64), vs[:3])
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_top_s(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    if not _workload_supported(config, "top_s"):
+        with pytest.raises(WorkloadUnsupported):
+            eng.top_s(int(us[0]), 3)
+        return
+    for u in {int(x) for x in us[:6]}:
+        for k in (1, 4, h.n):
+            verts, vals = eng.top_s(u, k)
+            bv, bs = brute_force_top_s(h, u, k)
+            np.testing.assert_array_equal(np.asarray(verts), bv)
+            np.testing.assert_array_equal(np.asarray(vals), bs)
+    with pytest.raises(ValueError):
+        eng.top_s(int(us[0]), 0)
+
+
+@pytest.mark.parametrize("config", CONFIG_NAMES)
+def test_op_s_distance(case, config):
+    name, h, us, vs, want = case
+    eng = _engine(name, h, config)
+    if not _workload_supported(config, "s_distance"):
+        with pytest.raises(WorkloadUnsupported):
+            eng.s_distance(int(us[0]), int(vs[0]), 1)
+        return
+    for s in (1, 2):
+        for u, v in zip(us[:12], vs[:12]):
+            bound = eng.s_distance(int(u), int(v), s)
+            exact = brute_force_s_distance(h, int(u), int(v), s)
+            # certified: reachability is never wrong, bounds are walks
+            assert (bound == 0) == (exact == 0), (u, v, s)
+            assert bound >= exact
+    with pytest.raises(ValueError):
+        eng.s_distance(int(us[0]), int(vs[0]), 0)
 
 
 # ---------------------------------------------------------------------------

@@ -501,7 +501,8 @@ def test_serve_facade():
 
 
 def test_request_types_registry():
-    assert set(REQUEST_TYPES) == {"mr", "s_reach"}
+    assert set(REQUEST_TYPES) == {"mr", "s_reach", "witness", "s_reach_k",
+                                  "mr_set", "top_s", "s_distance"}
     for kind, cls in REQUEST_TYPES.items():
         assert cls.kind == kind
     # frozen dataclasses: requests are immutable (safe across threads)

@@ -1,0 +1,342 @@
+"""Workload subsystem tests: witness machinery, the standalone
+structures (DistanceOracle, set/topk helpers), the serving round trip
+for every registered request kind, and the hypothesis property that
+every extracted witness is a valid s-walk realizing exactly the
+reported MR.
+
+Backend × op conformance cells live in tests/test_conformance.py; this
+module covers what the matrix can't — the subsystem's own invariants.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (MRSetRequest, SDistanceRequest, SReachKRequest,
+                       TopSRequest, WitnessRequest, WorkloadUnsupported,
+                       build_engine, from_edge_lists, random_hypergraph,
+                       serve, verify_witness)
+from repro.core import (MSTOracle, brute_force_mr_from_set,
+                        brute_force_mr_set, brute_force_s_distance,
+                        brute_force_s_reach_k, brute_force_top_s,
+                        brute_force_witness)
+from repro.serve.reach_service import REQUEST_TYPES
+from repro.workloads import (DistanceOracle, Witness, WORKLOAD_OPS,
+                             bounded_s_distance, cross_pairs,
+                             extract_witness, hop_bounded_s_reach,
+                             normalize_vertex_set, select_top_s, walk_wod,
+                             workload_capabilities)
+
+
+# ---------------------------------------------------------------------------
+# walk primitives
+# ---------------------------------------------------------------------------
+
+def test_walk_wod_and_verify():
+    h = from_edge_lists([[0, 1, 2], [1, 2, 3], [3, 4], [5, 6, 7]], n=8)
+    assert walk_wod(h, ()) == 0
+    assert walk_wod(h, (0,)) == 3            # singleton walk: |e|
+    assert walk_wod(h, (0, 1)) == 2          # overlap {1, 2}
+    assert walk_wod(h, (0, 1, 2)) == 1       # min(2, 1)
+    assert walk_wod(h, (0, 3)) == 0          # disjoint edges
+    with pytest.raises(IndexError):
+        walk_wod(h, (0, 99))
+    assert verify_witness(h, Witness(0, 3, 2, (0, 1)))
+    assert verify_witness(h, Witness(0, 5, 0, ()))       # unreachable pair
+    assert not verify_witness(h, Witness(0, 3, 2, ()))   # s>0 needs a walk
+    assert not verify_witness(h, Witness(0, 3, 3, (0, 1)))   # wod != s
+    assert not verify_witness(h, Witness(5, 3, 2, (0, 1)))   # u not in first
+    assert not verify_witness(h, Witness(0, 5, 2, (0, 1)))   # v not in last
+
+
+def test_extract_witness_matches_brute_force():
+    h = random_hypergraph(25, 40, seed=11)
+    oracle = MSTOracle(h)
+    rng = np.random.default_rng(2)
+    for u, v in rng.integers(0, h.n, (25, 2)):
+        u, v = int(u), int(v)
+        k = oracle.mr(u, v)
+        bk, bwalk = brute_force_witness(h, u, v)
+        assert bk == k                       # brute force agrees with oracle
+        assert walk_wod(h, bwalk) == k if k else bwalk == ()
+        if k == 0:
+            continue
+        walk = extract_witness(h, u, v, k)
+        w = Witness(u, v, k, walk)
+        assert verify_witness(h, w)
+    # asking for a strength above the true MR is loud, not a bad walk
+    with pytest.raises(ValueError):
+        u, v = 0, 1
+        extract_witness(h, u, v, oracle.mr(u, v) + 5)
+
+
+# ---------------------------------------------------------------------------
+# standalone structures
+# ---------------------------------------------------------------------------
+
+def test_hop_bounded_matches_brute_force():
+    h = random_hypergraph(25, 40, seed=4)
+    rng = np.random.default_rng(5)
+    for u, v in rng.integers(0, h.n, (15, 2)):
+        for s in (1, 2, 3):
+            d = bounded_s_distance(h, int(u), int(v), s)
+            assert d == brute_force_s_distance(h, int(u), int(v), s)
+            for k in (1, 2, h.m):
+                assert hop_bounded_s_reach(h, int(u), int(v), s, k) == \
+                    brute_force_s_reach_k(h, int(u), int(v), s, k)
+    # the hop budget truncates: distance-d pairs unreachable under d-1
+    assert bounded_s_distance(h, 0, 0, 1, max_hyperedges=0) in (0, 1)
+
+
+def test_distance_oracle_certified_bounds():
+    h = random_hypergraph(30, 45, seed=3)
+    for s in (1, 2, 3):
+        do = DistanceOracle(h, s)
+        assert do.num_landmarks >= 1 or h.m == 0
+        assert do.nbytes() > 0
+        rng = np.random.default_rng(s)
+        for u, v in rng.integers(0, h.n, (30, 2)):
+            bound = do.distance(int(u), int(v))
+            exact = brute_force_s_distance(h, int(u), int(v), s)
+            assert (bound == 0) == (exact == 0)      # never wrong on reach
+            assert bound >= exact                    # certified upper bound
+    with pytest.raises(ValueError):
+        DistanceOracle(h, 0)
+
+
+def test_distance_oracle_extra_landmarks_tighten():
+    h = random_hypergraph(40, 70, seed=8)
+    lean = DistanceOracle(h, 1, extra_landmarks=0)
+    rich = DistanceOracle(h, 1, extra_landmarks=8)
+    assert rich.num_landmarks >= lean.num_landmarks
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, h.n, (40, 2))
+    for u, v in pairs:
+        assert rich.distance(int(u), int(v)) <= lean.distance(int(u), int(v))
+
+
+def test_set_helpers():
+    us = normalize_vertex_set([3, 1, 3, 2], 10, "us")
+    np.testing.assert_array_equal(us, [1, 2, 3])
+    with pytest.raises(ValueError):
+        normalize_vertex_set([], 10, "us")
+    with pytest.raises(ValueError):
+        normalize_vertex_set([1.5], 10, "us")
+    with pytest.raises(IndexError):
+        normalize_vertex_set([10], 10, "us")
+    a, b = cross_pairs(np.array([0, 1]), np.array([5, 6, 7]))
+    np.testing.assert_array_equal(a, [0, 0, 0, 1, 1, 1])
+    np.testing.assert_array_equal(b, [5, 6, 7, 5, 6, 7])
+
+
+def test_select_top_s():
+    row = np.array([0, 5, 3, 5, 0, 2], np.int64)
+    verts, vals = select_top_s(row, u=1, k=3)
+    np.testing.assert_array_equal(verts, [3, 2, 5])   # 1 (self) excluded
+    np.testing.assert_array_equal(vals, [5, 3, 2])
+    verts, vals = select_top_s(row, u=0, k=100)       # k past the nonzeros
+    np.testing.assert_array_equal(verts, [1, 3, 2, 5])
+    np.testing.assert_array_equal(vals, [5, 5, 3, 2])
+
+
+# ---------------------------------------------------------------------------
+# engine-level invariants the matrix doesn't pin
+# ---------------------------------------------------------------------------
+
+def test_workload_capabilities_registry_shape():
+    caps = workload_capabilities()
+    assert all(tuple(row) == WORKLOAD_OPS for row in caps.values())
+    assert all(caps["hl-index"].values())
+    assert not any(caps["mst-oracle"].values())
+
+
+def test_distance_oracle_cache_invalidated_by_update():
+    h = random_hypergraph(20, 25, seed=6)
+    eng = build_engine(h, "hl-index")
+    do1 = eng.distance_oracle(2)
+    assert eng.distance_oracle(2) is do1             # cached per (s, extras)
+    eng.update(inserts=[[0, 1, 2, 3]])
+    assert eng.distance_oracle(2) is not do1         # update invalidates
+    for u in range(5):
+        bound = eng.s_distance(0, u, 2)
+        exact = brute_force_s_distance(eng.h, 0, u, 2)
+        assert (bound == 0) == (exact == 0) and bound >= exact
+
+
+def test_workloads_after_update_match_brute_force():
+    h = random_hypergraph(20, 25, seed=9)
+    eng = build_engine(h, "hl-index")
+    eng.update(inserts=[[0, 5, 9, 11]], deletes=[1])
+    h2 = eng.h
+    oracle = MSTOracle(h2)
+    for u, v in ((0, 9), (5, 11), (2, 17)):
+        w = eng.mr_witness(u, v)
+        assert w.s == oracle.mr(u, v) and verify_witness(h2, w)
+        assert eng.s_reach_k(u, v, 1, 2) == brute_force_s_reach_k(
+            h2, u, v, 1, 2)
+    verts, vals = eng.top_s(0, 4)
+    bv, bs = brute_force_top_s(h2, 0, 4)
+    np.testing.assert_array_equal(verts, bv)
+    np.testing.assert_array_equal(vals, bs)
+    assert eng.mr_set([0, 5], [9, 11]) == brute_force_mr_set(
+        h2, [0, 5], [9, 11])
+    targets = np.arange(h2.n)
+    np.testing.assert_array_equal(
+        eng.mr_from_set([0, 5], targets),
+        brute_force_mr_from_set(h2, [0, 5], targets))
+
+
+# ---------------------------------------------------------------------------
+# serving round trip: every registered request kind through submit()
+# ---------------------------------------------------------------------------
+
+# one well-formed instance per registered kind (u/v/s/k in range for the
+# 30-vertex fixture below); a new REQUEST_TYPES entry without a row here
+# fails test_request_registry_covered
+_SAMPLE_FIELDS = {
+    "mr": dict(u=0, v=1),
+    "s_reach": dict(u=0, v=1, s=2),
+    "witness": dict(u=0, v=1),
+    "s_reach_k": dict(u=0, v=1, s=2, k=3),
+    "mr_set": dict(us=(0, 1), vs=(2, 3)),
+    "top_s": dict(u=0, k=3),
+    "s_distance": dict(u=0, v=1, s=2),
+}
+
+
+def test_request_registry_covered():
+    assert set(_SAMPLE_FIELDS) == set(REQUEST_TYPES)
+
+
+@pytest.fixture(scope="module")
+def svc():
+    h = random_hypergraph(30, 45, seed=3)
+    service = serve(h, "hl-index", start=False)
+    yield service
+    service.close()
+
+
+@pytest.mark.parametrize("kind", sorted(_SAMPLE_FIELDS))
+def test_request_metadata_roundtrip(svc, kind):
+    """Every public request type takes the shared tenant/priority/
+    deadline metadata through the same admission validation: good
+    metadata resolves, each bad field raises — for every kind."""
+    cls = REQUEST_TYPES[kind]
+    fields = _SAMPLE_FIELDS[kind]
+    fut = svc.submit(cls(**fields, tenant="t9", priority="interactive",
+                         deadline_ms=10_000.0))
+    svc.drain()
+    assert fut.done() and fut.exception() is None
+    req = cls(**fields)
+    assert (req.tenant, req.priority, req.deadline_ms) == \
+        ("default", "standard", None)        # defaults intact per kind
+    with pytest.raises(ValueError):
+        svc.submit(cls(**fields, tenant=""))
+    with pytest.raises(ValueError):
+        svc.submit(cls(**fields, priority="warp-speed"))
+    with pytest.raises(ValueError):
+        svc.submit(cls(**fields, deadline_ms=0))
+
+
+def test_service_workload_answers_match_brute_force(svc):
+    h = svc.engine.h
+    oracle = MSTOracle(h)
+    f_w = svc.witness(3, 17)
+    f_k = svc.s_reach_k(3, 17, 2, 2)
+    f_set = svc.mr_set([0, 1, 2], [10, 11, 12])
+    f_top = svc.top_s(5, 4)
+    f_d = svc.s_distance(3, 17, 2)
+    svc.drain()
+    w = f_w.result(timeout=0)
+    assert w.s == oracle.mr(3, 17) and verify_witness(h, w)
+    assert f_k.result(timeout=0) == brute_force_s_reach_k(h, 3, 17, 2, 2)
+    assert f_set.result(timeout=0) == brute_force_mr_set(
+        h, [0, 1, 2], [10, 11, 12])
+    bv, bs = brute_force_top_s(h, 5, 4)
+    assert list(f_top.result(timeout=0)) == list(zip(bv.tolist(),
+                                                     bs.tolist()))
+    bound, exact = f_d.result(timeout=0), brute_force_s_distance(h, 3, 17, 2)
+    assert (bound == 0) == (exact == 0) and bound >= exact
+    stats = svc.stats().as_dict()
+    assert all(stats["workload_answered"].get(k, 0) >= 1
+               for k in ("witness", "s_reach_k", "mr_set", "top_s",
+                         "s_distance"))
+
+
+def test_service_refuses_unsupported_workloads_at_admission():
+    h = random_hypergraph(20, 25, seed=1)
+    with serve(h, "online", start=False) as svc_o:
+        with pytest.raises(WorkloadUnsupported):
+            svc_o.witness(0, 1)
+        with pytest.raises(WorkloadUnsupported):
+            svc_o.top_s(0, 3)
+        fut = svc_o.s_reach_k(0, 1, 1, 3)    # traversal ops still served
+        svc_o.drain()
+        assert isinstance(fut.result(timeout=0), bool)
+        assert svc_o.stats().expired == 0
+
+
+def test_request_types_frozen_and_hashable():
+    for kind, fields in _SAMPLE_FIELDS.items():
+        req = REQUEST_TYPES[kind](**fields)
+        assert hash(req) == hash(REQUEST_TYPES[kind](**fields))
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            req.tenant = "x"
+    # mr_set coerces list inputs to tuples so the instance stays hashable
+    req = MRSetRequest([3, 1], [2])
+    assert req.us == (3, 1) and req.vs == (2,)
+    assert hash(req) == hash(MRSetRequest((3, 1), (2,)))
+
+
+def test_workload_requests_importable_from_api():
+    import repro.api as api
+    for name in ("WitnessRequest", "SReachKRequest", "MRSetRequest",
+                 "TopSRequest", "SDistanceRequest", "Witness",
+                 "verify_witness", "DistanceOracle", "WorkloadUnsupported",
+                 "WORKLOAD_OPS", "workload_capabilities"):
+        assert name in api.__all__ and hasattr(api, name)
+    assert {WitnessRequest, SReachKRequest, MRSetRequest, TopSRequest,
+            SDistanceRequest} <= set(REQUEST_TYPES.values())
+
+
+# ---------------------------------------------------------------------------
+# property: witnesses are valid s-walks realizing exactly the MR
+# ---------------------------------------------------------------------------
+
+# guarded import (not a module-level importorskip: that would skip the
+# whole file, and the non-property tests above must run regardless)
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                          # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @st.composite
+    def small_hypergraphs(draw):
+        n = draw(st.integers(4, 12))
+        m = draw(st.integers(1, 10))
+        edges = [sorted(draw(st.sets(st.integers(0, n - 1), min_size=1,
+                                     max_size=min(n, 5))))
+                 for _ in range(m)]
+        return from_edge_lists(edges, n=n)
+
+    @settings(max_examples=40, deadline=None)
+    @given(h=small_hypergraphs(), data=st.data())
+    def test_property_witness_walks_are_valid(h, data):
+        u = data.draw(st.integers(0, h.n - 1), label="u")
+        v = data.draw(st.integers(0, h.n - 1), label="v")
+        oracle = MSTOracle(h)
+        k = oracle.mr(u, v)
+        if k == 0:
+            return
+        walk = extract_witness(h, u, v, k)
+        # a genuine s-walk: endpoints covered, every consecutive overlap
+        # >= k, and its min overlap is *exactly* the reported MR
+        assert walk[0] in h.edges_of(u) and walk[-1] in h.edges_of(v)
+        assert walk_wod(h, walk) == k
+        assert verify_witness(h, Witness(u, v, k, walk))
+else:                                        # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_witness_walks_are_valid():
+        pass

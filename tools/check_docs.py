@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency guard (run by the CI `docs` job).
 
-Eight checks, so documentation cannot silently drift from the code:
+Nine checks, so documentation cannot silently drift from the code:
 
 1. Every relative markdown link in README.md and docs/*.md resolves to
    an existing file or directory.
@@ -42,6 +42,13 @@ Eight checks, so documentation cannot silently drift from the code:
    `"default"` | ... |``) against `dataclasses.fields(Request)` (names
    and defaults) — adding a priority class or a request metadata field
    without documenting it, or vice versa, fails the build.
+9. The workload-capability table in the "Workloads" section of
+   docs/ARCHITECTURE.md (header ``| backend | `witness` | ... |``,
+   rows ``| `hl-index` | yes | ... |``) matches the live
+   `repro.api.workload_capabilities()` both ways — the header must
+   list exactly `WORKLOAD_OPS` in order, every registered backend
+   needs a row, every row must agree cell-for-cell, and documenting a
+   backend the registry does not have fails the build.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -319,6 +326,54 @@ def check_multitenant_section():
     return problems
 
 
+def check_workload_table():
+    from repro.api import WORKLOAD_OPS, workload_capabilities
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if not arch.is_file():
+        return ["docs/ARCHITECTURE.md is missing"]
+    body = _section(arch.read_text(), "Workloads")
+    if not body:
+        return ["docs/ARCHITECTURE.md has no '## Workloads' section"]
+    header = re.search(r"^\|\s*backend\s*\|(.+)\|\s*$", body, re.M)
+    if header is None:
+        return ["docs/ARCHITECTURE.md Workloads section has no "
+                "'| backend | ...' capability table header"]
+    doc_ops = tuple(re.findall(r"`(\w+)`", header.group(1)))
+    if doc_ops != tuple(WORKLOAD_OPS):
+        return [f"docs/ARCHITECTURE.md workload-capability table header "
+                f"lists ops {list(doc_ops)} but the live WORKLOAD_OPS is "
+                f"{list(WORKLOAD_OPS)}"]
+    documented = {}
+    for line in body.splitlines():
+        row = re.match(r"^\|\s*`([\w-]+)`\s*\|(.+)\|\s*$", line)
+        if row is None:
+            continue
+        cells = [c.strip() for c in row.group(2).split("|")]
+        if len(cells) == len(doc_ops) and set(cells) <= {"yes", "no"}:
+            documented[row.group(1)] = {
+                op: cell == "yes" for op, cell in zip(doc_ops, cells)}
+    problems = []
+    live = workload_capabilities()
+    for name, caps in live.items():
+        if name not in documented:
+            problems.append(
+                f"docs/ARCHITECTURE.md workload-capability table is "
+                f"missing registered backend `{name}`")
+        elif documented[name] != caps:
+            problems.append(
+                f"docs/ARCHITECTURE.md workload-capability row for "
+                f"`{name}` says {documented[name]} but the live registry "
+                f"says {caps}")
+    for name in documented:
+        if name not in live:
+            problems.append(
+                f"docs/ARCHITECTURE.md workload-capability table "
+                f"documents backend `{name}` that the live registry does "
+                f"not have")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_backend_table()
                 + check_update_capability_table()
@@ -326,12 +381,14 @@ def main() -> int:
                 + check_construction_table()
                 + check_format_table()
                 + check_kernel_table()
-                + check_multitenant_section())
+                + check_multitenant_section()
+                + check_workload_table())
     for p in problems:
         print(f"FAIL: {p}")
     if problems:
         return 1
-    from repro.api import available_backends, update_capabilities
+    from repro.api import (available_backends, update_capabilities,
+                           workload_capabilities)
     from repro.core.hlindex import CONSTRUCTION_MODES
     from repro.kernels import KERNEL_REGISTRY
     from repro.serve.reach_service import REQUEST_TYPES
@@ -344,7 +401,9 @@ def main() -> int:
           f"{sorted(CONSTRUCTION_MODES)}; on-disk formats match "
           f"{FORMAT_REGISTRY}; kernel table matches "
           f"{sorted(KERNEL_REGISTRY)}; multi-tenant section matches "
-          f"{PRIORITY_CLASSES} and the Request metadata fields")
+          f"{PRIORITY_CLASSES} and the Request metadata fields; workload "
+          f"capabilities match for "
+          f"{sorted(workload_capabilities())}")
     return 0
 
 
