@@ -30,7 +30,12 @@ so the same code runs tests on 1-4 host devices and the 512-way dry-run.
 protocol: the closure is computed **once** at build time and kept
 device-resident in its block-sharded layout; every query — scalar or
 batch — is served off that resident structure through a mesh-sharded
-``DeviceSnapshot``, never by re-running the closure.
+``DeviceSnapshot``, never by re-running the closure.  Updates are
+**scoped** in both regimes (capability ``"scoped"``): an edge edit
+re-closes only the touched line-graph component block and patches the
+resident W* / snapshot in place (closure regime), or routes the touched
+components through ``build_sharded`` and splices (label regime) — the
+full fixpoint and the full pair pass never rerun after build.
 """
 from __future__ import annotations
 
@@ -45,7 +50,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import make_mesh, shard_map
 from .engine import (WORKLOAD_OPS, _EngineBase, register_backend,
                      validate_batch)
-from .hlindex import HLIndex, build_sharded
+from .hlindex import (HLIndex, auto_device_overlaps, build_sharded,
+                      pad_label_rows)
+from .hypergraph import (NeighborCSR, apply_edge_edits,
+                         induced_subhypergraph, neighbor_csr)
+from .maintenance import apply_updates, component_of
 from .minimal import minimize
 from .query import DeviceSnapshot, mr_query, s_reach_query
 
@@ -294,6 +303,24 @@ def _round_up(x: int, k: int) -> int:
     return -(-x // k) * k
 
 
+@functools.lru_cache(maxsize=None)
+def _closure_patcher(sharding: NamedSharding, donate: bool):
+    """Jitted in-place patch of the block-sharded W*: zero the freed
+    slots' rows and columns, then scatter the re-closed scope block at
+    its slots.  Buffer-donated off CPU, so the resident closure is
+    patched without a second [mp, mp] allocation — the same donation
+    path ``DeviceSnapshot.to_mesh(donate_base=)`` uses for snapshots."""
+    def go(w, freed, slots, sub):
+        if freed.shape[0]:
+            w = w.at[freed, :].set(0.0)
+            w = w.at[:, freed].set(0.0)
+        if slots.shape[0]:
+            w = w.at[slots[:, None], slots[None, :]].set(sub)
+        return w
+    return jax.jit(go, out_shardings=sharding,
+                   donate_argnums=(0,) if donate else ())
+
+
 @register_backend("sharded")
 class ShardedEngine(_EngineBase):
     """Multi-device backend: W* block-sharded over a mesh, queries served
@@ -321,13 +348,36 @@ class ShardedEngine(_EngineBase):
     this mesh, per-device component shards, byte-identical to
     ``build_fast``) and serves queries off the mesh-sharded **label**
     snapshot [n·Lmax ≪ m²].  Scalar queries answer through the paper's
-    host merge-join; updates rebuild the labels through the same sharded
-    builder (capability stays ``rebuild``).  This is the memory-lean
-    serving shape for graphs whose closure no longer fits the mesh.
+    host merge-join.  This is the memory-lean serving shape for graphs
+    whose closure no longer fits the mesh.
+
+    **Scoped updates (capability "scoped"), both regimes.**  Labels and
+    closure entries never cross line-graph components, so an edit only
+    invalidates the component(s) containing its 1-hop touched set:
+
+    * closure regime — hyperedges map to physical W* slots through
+      ``_slot_of`` (deletes free slots, inserts take the lowest free
+      ones, so W* is never permuted); the (max,min) fixpoint reruns over
+      the touched components' sub-line-graph alone and the closed block
+      is scattered into the resident W* at its slots (freed slots' rows/
+      columns zeroed — every other entry between a scope and non-scope
+      slot is already 0, the cross-component annihilator).  The cached
+      snapshot is patched row-wise from the same sub-closure
+      (``DeviceSnapshot.patch_rows``), so updates stay scoped even after
+      ``snapshot()`` dropped W*.
+    * label regime — ``apply_updates`` with the engine's persistent
+      ``NeighborCSR`` (1-hop patched per edit, never recomputed) and
+      ``build_sharded`` as the scope builder: the dirty components run
+      LPT-sharded in parallel, then ``splice_rank`` composes exactly as
+      serial maintenance — answers byte-identical to a fresh rebuild.
+
+    Both paths report true ``refreshed_vertices`` through the dirty-rows
+    contract, so ``ReplicaGroup`` fan-out patches rows instead of
+    re-landing snapshots whole.
     """
 
     name = "sharded"
-    update_capability = "rebuild"
+    update_capability = "scoped"
     # closure/label rows serve the label-row reductions; the host graph
     # is maintained under updates, so the traversal ops run too — same
     # capability shape as the single-device closure backend
@@ -339,7 +389,8 @@ class ShardedEngine(_EngineBase):
                  rounds: Optional[int] = None,
                  idx: Optional[HLIndex] = None,
                  minimizer=None, workers: Optional[int] = None,
-                 num_shards: Optional[int] = None):
+                 num_shards: Optional[int] = None,
+                 neighbors: Optional[NeighborCSR] = None):
         super().__init__(h)
         self.mesh = mesh
         self.axes = axes
@@ -353,6 +404,14 @@ class ShardedEngine(_EngineBase):
         self._minimizer = minimizer
         self._workers = workers
         self._num_shards = num_shards
+        self._nbr = neighbors              # persistent line-graph CSR
+        # hyperedge id -> physical W*/snapshot column; identity until a
+        # scoped update frees/reuses slots
+        self._slot_of = np.arange(m_true, dtype=np.int64)
+        # (dirty_vertices, sval rows [d, mp], mp) staged by a scoped
+        # closure update for the next snapshot() patch
+        self._pending_rows: Optional[Tuple[np.ndarray, np.ndarray, int]] \
+            = None
         self._snap: Optional[DeviceSnapshot] = None
 
     @property
@@ -406,11 +465,17 @@ class ShardedEngine(_EngineBase):
                 f"block-shard over; got axis names {mesh.axis_names}")
         if build_labels:
             minimizer = minimize if minimize_labels else None
+            # the neighbor index is computed here (same host/mesh route
+            # build_sharded would pick) and kept on the engine: scoped
+            # updates 1-hop patch it instead of re-running the pair pass
+            nbr = neighbor_csr(h, mesh=mesh if (auto_device_overlaps(h)
+                               and int(mesh.devices.size) > 1) else None)
             idx = build_sharded(h, mesh=mesh, minimizer=minimizer,
-                                workers=workers, num_shards=num_shards)
+                                workers=workers, num_shards=num_shards,
+                                neighbors=nbr)
             eng = cls(h, mesh, axes, schedule, None, h.m, rounds,
                       idx=idx, minimizer=minimizer, workers=workers,
-                      num_shards=num_shards)
+                      num_shards=num_shards, neighbors=nbr)
             eng.use_kernels = bool(use_kernels)
             return eng
         w_star, m_true = cls._closure_of(h, mesh, axes, schedule, rounds,
@@ -420,25 +485,171 @@ class ShardedEngine(_EngineBase):
         return eng
 
     def _apply_update(self, inserts=(), deletes=()) -> None:
-        """Recompute the resident structure for the edited graph on the
-        same mesh (the block-sharded closure, or the sharded-built labels
-        in the ``build_labels`` regime — no incremental form either way,
-        capability "rebuild") and invalidate the mesh-sharded snapshot so
-        the next ``snapshot()`` / ``to_mesh`` re-derives a coherent one."""
-        from .hypergraph import apply_edge_edits
-        new_h, _, _ = apply_edge_edits(self.h, inserts, deletes)
+        """Scoped maintenance on the same mesh (capability "scoped"):
+        the label regime splices the touched components through the
+        parallel sharded builder, the closure regime re-closes only the
+        touched block of W* and patches the resident structures in
+        place.  See the class docstring for the slot/patch mechanics."""
         if self._idx is not None:
-            self._idx = build_sharded(new_h, mesh=self.mesh,
-                                      minimizer=self._minimizer,
-                                      workers=self._workers,
-                                      num_shards=self._num_shards)
-            self._m_true = new_h.m
+            self._apply_label_update(inserts, deletes)
         else:
+            self._apply_closure_update(inserts, deletes)
+
+    def _apply_label_update(self, inserts, deletes) -> None:
+        if self._nbr is None:
+            # a restored engine lost the build-time neighbor index; pay
+            # the pair pass once, then every update 1-hop patches it
+            self._nbr = neighbor_csr(self.h)
+        builder = functools.partial(build_sharded, workers=self._workers,
+                                    num_shards=self._num_shards)
+        new_h, self._idx, report = apply_updates(
+            self.h, self._idx, inserts, deletes, builder=builder,
+            minimizer=self._minimizer, neighbors=self._nbr)
+        self._nbr = report.neighbors
+        self._m_true = new_h.m
+        self._graph_changed(new_h,
+                            dirty_rows=(None if report.full_rebuild
+                                        else report.refreshed_vertices))
+
+    def _apply_closure_update(self, inserts, deletes) -> None:
+        old_h = self.h
+        new_h, old_to_new, touched = apply_edge_edits(old_h, inserts,
+                                                      deletes)
+        scope = (np.fromiter(sorted(component_of(new_h, touched)),
+                             np.int64) if touched.size
+                 else np.empty(0, np.int64))
+        has_basis = self._w_star is not None or self._snap is not None
+        if not has_basis or old_h.m == 0 or scope.size == new_h.m:
+            # nothing resident to patch, or the edit reaches every
+            # hyperedge: recompute whole (identical to a fresh build)
             self._w_star, self._m_true = self._closure_of(
                 new_h, self.mesh, self.axes, self.schedule, self.rounds,
                 self.use_kernels)
             self._m_padded = int(self._w_star.shape[0])
-        self._graph_changed(new_h)
+            self._slot_of = np.arange(new_h.m, dtype=np.int64)
+            self._pending_rows = None
+            self._graph_changed(new_h)
+            return
+
+        # -- slot bookkeeping: survivors keep their physical W* slots,
+        # deletions free theirs, inserts take the lowest free slots (so
+        # the resident [mp, mp] is never permuted, only patched)
+        mp = self._m_padded
+        del_ids = np.asarray(sorted({int(d) for d in deletes}), np.int64)
+        freed = (self._slot_of[del_ids] if del_ids.size
+                 else np.empty(0, np.int64))
+        keep = np.nonzero(old_to_new >= 0)[0]
+        slot_of = np.empty(new_h.m, np.int64)
+        if keep.size:
+            slot_of[old_to_new[keep]] = self._slot_of[keep]
+        n_new_edges = new_h.m - keep.size
+        if n_new_edges:
+            used = self._slot_of[keep]
+            free = np.setdiff1d(np.arange(mp, dtype=np.int64), used)
+            if free.size < n_new_edges:
+                lcm = int(np.lcm(self.mesh.shape[self.axes[0]],
+                                 self.mesh.shape[self.axes[1]]))
+                mp = _round_up(mp + n_new_edges - free.size, lcm)
+                self._grow_w_padding(mp)
+                free = np.setdiff1d(np.arange(mp, dtype=np.int64), used)
+            slot_of[keep.size:] = free[:n_new_edges]
+        self._slot_of = slot_of
+
+        # -- re-close only the touched components' block.  Extracting
+        # whole components preserves every overlap, and no (max,min)
+        # walk crosses a component boundary, so the sub-closure equals
+        # the full closure restricted to the scope.
+        if scope.size:
+            sub_h, sub_verts = induced_subhypergraph(new_h, scope)
+            closed = np.asarray(sharded_maxmin_closure(
+                sub_h.line_graph(np.int32).astype(np.float32), self.mesh,
+                rounds=self.rounds, schedule=self.schedule,
+                axes=self.axes, trim=True,
+                use_kernels=self.use_kernels), dtype=np.float32)
+        else:
+            sub_h, sub_verts = None, np.empty(0, np.int64)
+            closed = np.zeros((0, 0), np.float32)
+        scope_slots = (slot_of[scope] if scope.size
+                       else np.empty(0, np.int64))
+
+        # -- patch the resident W* (if still held).  Old entries between
+        # a scope slot and a surviving non-scope slot are already 0
+        # (different components — insertions only merge components, and
+        # every fragment of a deletion-split component contains a
+        # surviving touched neighbor of the deleted hyperedge, putting
+        # the whole fragment in scope), so zero-freed + scatter-scope is
+        # the complete delta.
+        if self._w_star is not None and (freed.size or scope.size):
+            donate = all(d.platform != "cpu"
+                         for d in self.mesh.devices.flat)
+            patcher = _closure_patcher(
+                NamedSharding(self.mesh, P(*self.axes)), donate)
+            self._w_star = patcher(self._w_star,
+                                   jnp.asarray(freed, jnp.int32),
+                                   jnp.asarray(scope_slots, jnp.int32),
+                                   jnp.asarray(closed))
+
+        # -- stage the snapshot row patch: dirty vertices are exactly
+        # the scope's vertices plus those of deleted hyperedges (which
+        # may have lost their last hyperedge).  Their sval rows come
+        # from the sub-closure alone; untouched rows already hold 0 at
+        # every slot the patch could change (same confinement argument).
+        if self._snap is not None:
+            dirty = sub_verts
+            if del_ids.size:
+                dv = np.unique(np.concatenate(
+                    [old_h.edge(int(d)) for d in del_ids]))
+                dirty = np.union1d(dirty, dv)
+            rows = np.zeros((dirty.size, mp), np.int32)
+            if scope.size and sub_verts.size:
+                block = np.zeros((sub_verts.size, scope.size), np.float32)
+                rr = np.repeat(np.arange(sub_h.n), np.diff(sub_h.v_ptr))
+                np.maximum.at(block, rr, closed[sub_h.v_idx])
+                pos = np.searchsorted(dirty, sub_verts)
+                rows[pos[:, None], scope_slots[None, :]] = \
+                    block.astype(np.int32)
+            self._merge_pending(dirty.astype(np.int64), rows, mp)
+            self._m_true = new_h.m
+            self._graph_changed(new_h, dirty_rows=dirty)
+        else:
+            self._pending_rows = None
+            self._m_true = new_h.m
+            self._graph_changed(new_h, dirty_rows=None)
+            # the fresh W* patch is the whole resident state; the next
+            # snapshot() derives from it whole
+            self._snap = None
+
+    def _grow_w_padding(self, mp_new: int) -> None:
+        """Grow the padded slot space to ``mp_new`` (zero padding is the
+        (max,min) annihilator, so growth never changes an answer)."""
+        if self._w_star is not None:
+            pad = mp_new - self._m_padded
+            spec = NamedSharding(self.mesh, P(*self.axes))
+            self._w_star = jax.jit(
+                lambda w: jnp.pad(w, ((0, pad), (0, pad))),
+                out_shardings=spec)(self._w_star)
+        self._m_padded = mp_new
+
+    def _merge_pending(self, dirty: np.ndarray, rows: np.ndarray,
+                       mp: int) -> None:
+        """Accumulate staged snapshot rows across updates between two
+        ``snapshot()`` calls.  A previously staged row not re-dirtied by
+        this update is still valid: any slot this update changed that
+        could intersect it would have pulled its component into this
+        update's scope (and hence re-dirtied it), so its value there was
+        already 0 — only zero-padding to the grown width is needed."""
+        prev = self._pending_rows
+        if prev is not None:
+            pd, prows, pmp = prev
+            stale = ~np.isin(pd, dirty)
+            if stale.any():
+                old_rows = np.zeros((int(stale.sum()), mp), np.int32)
+                old_rows[:, :pmp] = prows[stale]
+                dirty = np.concatenate([dirty, pd[stale]])
+                rows = np.concatenate([rows, old_rows])
+                order = np.argsort(dirty)
+                dirty, rows = dirty[order], rows[order]
+        self._pending_rows = (dirty, rows, mp)
 
     # -- queries: everything routes through the resident snapshot (label
     # regime scalars short-circuit to the paper's host merge-join) -------
@@ -466,17 +677,75 @@ class ShardedEngine(_EngineBase):
         return np.asarray(self._query_snapshot().s_reach(us, vs, int(s)))
 
     def snapshot(self) -> DeviceSnapshot:
-        if not self._snapshot_current():
+        """Current padded device form.  After a scoped update the stale
+        snapshot is **patched**: only the dirty rows are re-derived (from
+        the spliced labels, or from the staged sub-closure rows) and
+        scattered over the old tensors.  Only a full re-derivation frees
+        W*, and only while no WAL is attached — with an ``IndexStore`` in
+        front, more updates are coming and the resident closure is what
+        keeps them patchable in place, so it is retained."""
+        if self._snapshot_current():
+            return self._snap
+        basis, dirty = self._snap, self._dirty_rows
+        if self._idx is not None and basis is not None and dirty is not None:
+            self._snap = self._patched_label_snapshot(basis, dirty)
+            self.last_snapshot_refresh_rows = int(np.asarray(dirty).size)
+        elif (basis is not None and dirty is not None
+                and self._pending_rows is not None):
+            self._snap = self._patched_closure_snapshot(basis)
+            self.last_snapshot_refresh_rows = int(self._pending_rows[0].size)
+        else:
             self._snap = self._build_snapshot()
             self.last_snapshot_refresh_rows = self.h.n
-            self._dirty_rows = np.empty(0, np.int64)
-            # every query path serves off the snapshot from here on — free
-            # the closure so the resident footprint is the snapshot alone
-            # (the regime this backend exists for is memory-bound).  The
-            # label regime keeps its index: scalar queries and rebuilds
-            # still consume it, and it is the small structure here.
-            self._w_star = None
+            if self._idx is None and self._wal is None:
+                # static serving: every query path serves off the
+                # snapshot from here on — free the closure so the
+                # resident footprint is the snapshot alone (scoped
+                # updates still work: they patch the snapshot directly)
+                self._w_star = None
+        self._pending_rows = None
+        self._dirty_rows = np.empty(0, np.int64)
         return self._snap
+
+    def _slot_ceiling(self) -> int:
+        """Number of leading snapshot columns that can carry a live
+        hyperedge (max occupied slot + 1) — the row ``lengths`` bound.
+        Identity slots make this ``m_true``, matching a fresh build."""
+        return int(self._slot_of.max()) + 1 if self._slot_of.size else 0
+
+    def _patched_closure_snapshot(self, basis: DeviceSnapshot
+                                  ) -> DeviceSnapshot:
+        dirty, rows, mp = self._pending_rows
+        cur_l = int(basis.ranks.shape[1])
+        lmax = max(cur_l, mp)
+        if rows.shape[1] < lmax:
+            rows = np.pad(rows, ((0, 0), (0, lmax - rows.shape[1])))
+        n_eff = max(int(basis.ranks.shape[0]),
+                    _round_up(self.h.n, self.mesh.shape[self.axes[0]]))
+        # rank space = slot id, dense ascending per row (same form the
+        # full derivation materializes); untouched rows keep theirs
+        row_ranks = np.broadcast_to(np.arange(lmax, dtype=np.int32),
+                                    (dirty.size, lmax))
+        row_lengths = np.full(dirty.size, self._slot_ceiling(), np.int32)
+        return basis.patch_rows(dirty, row_ranks, rows, row_lengths,
+                                n=n_eff, lmax=lmax, version=self.version,
+                                backend=self.name)
+
+    def _patched_label_snapshot(self, basis: DeviceSnapshot,
+                                dirty) -> DeviceSnapshot:
+        idx = self._idx
+        dirty = np.asarray(dirty, np.int64)
+        basis_len = np.asarray(basis.lengths)
+        dirty_len = [idx.labels_s[int(u)].size for u in dirty]
+        lmax = int(max(int(basis_len.max()) if basis_len.size else 0,
+                       max(dirty_len, default=0)))
+        row_ranks, row_svals, row_lengths = pad_label_rows(
+            [idx.labels_rank[int(u)] for u in dirty],
+            [idx.labels_s[int(u)] for u in dirty], pad_to=lmax)
+        n_eff = max(int(basis.ranks.shape[0]), self.h.n)
+        return basis.patch_rows(dirty, row_ranks, row_svals, row_lengths,
+                                n=n_eff, lmax=lmax, version=self.version,
+                                backend=self.name)
 
     def _build_snapshot(self) -> DeviceSnapshot:
         h, mesh = self.h, self.mesh
@@ -501,7 +770,7 @@ class ShardedEngine(_EngineBase):
         inc = np.full((n_pad, d_max), mp, np.int32)
         rows = np.repeat(np.arange(h.n), deg)
         cols = np.arange(h.nnz) - np.repeat(h.v_ptr[:-1], deg)
-        inc[rows, cols] = h.v_idx
+        inc[rows, cols] = self._slot_of[h.v_idx]   # edge id -> W* slot
         spec2d = NamedSharding(mesh, P(row_ax, col_ax))
         inc_dev = jax.device_put(inc, NamedSharding(mesh, P(row_ax, None)))
 
@@ -529,7 +798,9 @@ class ShardedEngine(_EngineBase):
                                      (n_pad, mp)),
             out_shardings=spec2d)()
         lengths = np.zeros(n_pad, np.int32)
-        lengths[:h.n] = self._m_true
+        # every occupied slot must fall inside the row length; identity
+        # slots make this m_true, same as before scoped maintenance
+        lengths[:h.n] = self._slot_ceiling()
         lengths = jax.device_put(lengths, NamedSharding(mesh, P(row_ax)))
         return DeviceSnapshot.from_padded(ranks, svals, lengths, self.name,
                                           version=self.version)
@@ -544,6 +815,8 @@ class ShardedEngine(_EngineBase):
             total += self._m_padded * self._m_padded * 4
         if self._idx is not None:
             total += self._idx.nbytes()
+        if self._nbr is not None:
+            total += self._nbr.nbytes()
         if self._snap is not None:
             total += self._snap.nbytes()
         return total

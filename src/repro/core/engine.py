@@ -44,8 +44,10 @@ in docs/ARCHITECTURE.md):
 * ``"incremental"`` — adjacency caches are patched on the 1-hop touched
   set, no construction at all (``online``, ``frontier``);
 * ``"rebuild"`` — the structure is recomputed whole, but through the
-  same call so serving code never special-cases it (``closure``,
-  ``sharded``);
+  same call so serving code never special-cases it (``closure``;
+  ``sharded`` graduated to "scoped" — its closure regime re-closes only
+  the touched component block of W*, its label regime splices through
+  the parallel sharded builder);
 * ``"unsupported"`` — ``update`` raises ``UpdateUnsupported`` (the
   static baselines: ``ete``, ``threshold``, ``mst-oracle``).
 
@@ -347,9 +349,10 @@ class _EngineBase:
         updates): the cached snapshot becomes stale but is *kept* as the
         patch basis for the next ``snapshot()``.  ``None`` means all
         rows — the next derivation is full anyway, so the stale snapshot
-        is dropped immediately rather than held through the rebuild (the
-        rebuild backends are the memory-bound regime; holding an
-        unusable snapshot across ``update`` would raise peak memory for
+        is dropped immediately rather than held through the rebuild
+        (rebuild-capability backends and the full-rebuild fallbacks of
+        scoped ones are the memory-bound regime; holding an unusable
+        snapshot across ``update`` would raise peak memory for
         nothing)."""
         self.h = new_h
         self.version += 1

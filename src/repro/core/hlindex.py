@@ -60,6 +60,18 @@ _DEVICE_OVERLAP_PAIRS = 5e7
 # regardless of how many pairs it walks.
 _DEVICE_OVERLAP_DENSE_BUDGET = 4 * 2**30
 
+
+def auto_device_overlaps(h: Hypergraph) -> bool:
+    """Whether the neighbor-overlap precompute for ``h`` should run on a
+    device mesh: the host pair pass would walk more than
+    ``_DEVICE_OVERLAP_PAIRS`` ordered co-incidence pairs *and* the dense
+    [m, m] footprint of the device route stays affordable.  Shared by
+    ``build_sharded`` and the sharded engine's build-time
+    ``NeighborCSR`` precompute so both pick the same route."""
+    deg = h.vertex_degrees
+    return bool(float((deg * deg).sum()) > _DEVICE_OVERLAP_PAIRS
+                and 12.0 * h.m * h.m <= _DEVICE_OVERLAP_DENSE_BUDGET)
+
 # When a multi-device mesh defaults the worker count (the engine's
 # construction="auto" path), the fork pool only engages once the shared
 # neighbor index carries at least this many entries — below it the
@@ -510,16 +522,12 @@ def build_sharded(h: Hypergraph, *,
         idx.stats.update(shards=0, components=0, construction="sharded",
                          pool_fallback=0.0)
         return idx
+    neighbor_reused = neighbors is not None
     if neighbors is not None:
         nbr = neighbors
     else:
         if device_overlaps is None:
-            deg = h.vertex_degrees
-            device_overlaps = (
-                float((deg * deg).sum()) > _DEVICE_OVERLAP_PAIRS
-                # the device route is dense [m, m]; never auto-pick it
-                # when that footprint dwarfs the sparse host pass
-                and 12.0 * h.m * h.m <= _DEVICE_OVERLAP_DENSE_BUDGET)
+            device_overlaps = auto_device_overlaps(h)
         nbr = neighbor_csr(h, mesh=mesh if device_overlaps else None)
     if auto_workers and nbr.idx.size < _POOL_MIN_NEIGHBOR_ENTRIES:
         workers = None          # defaulted pool would not amortize
@@ -586,7 +594,8 @@ def build_sharded(h: Hypergraph, *,
                                       float(sub.stats.get("m_peak_entries",
                                                           0)))
     stats.update(shards=len(shards), components=int(comp.max()) + 1,
-                 construction="sharded", pool_fallback=float(pool_fallback))
+                 construction="sharded", pool_fallback=float(pool_fallback),
+                 neighbor_reused=float(neighbor_reused))
     return HLIndex(h=h, rank=rank, perm=perm, labels_edge=le,
                    labels_rank=lr, labels_s=ls, dual_u=du, dual_s=ds,
                    stats=stats)

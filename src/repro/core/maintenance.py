@@ -55,7 +55,7 @@ from typing import Callable, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .hypergraph import (Hypergraph, apply_edge_edits,
+from .hypergraph import (Hypergraph, NeighborCSR, apply_edge_edits,
                          induced_subhypergraph)
 from .hlindex import HLIndex, build_fast, splice_rank
 
@@ -114,20 +114,30 @@ class UpdateReport:
     * ``full_rebuild`` — True when the whole index was rebuilt (scope
       covered the graph, rank key space exhausted, or there was no old
       index); ``refreshed_vertices`` then covers every vertex.
+    * ``neighbors`` — the 1-hop-patched ``NeighborCSR`` for the new
+      graph, when the caller passed one in (``apply_updates(...,
+      neighbors=)``); callers that keep a persistent neighbor index feed
+      it back into the next update so no full O(Σd²) pair pass ever
+      reruns.
     """
 
     scope: int
     refreshed_vertices: np.ndarray
     full_rebuild: bool
+    neighbors: Optional[NeighborCSR] = None
 
 
-def component_of(h: Hypergraph, seeds: Sequence[int]) -> Set[int]:
-    """Connected component(s) of the line graph containing ``seeds``."""
+def component_of(h: Hypergraph, seeds: Sequence[int],
+                 neighbors: Optional[NeighborCSR] = None) -> Set[int]:
+    """Connected component(s) of the line graph containing ``seeds``.
+    With ``neighbors`` the BFS reads precomputed CSR rows instead of
+    recomputing each neighborhood on the fly."""
+    row = neighbors.row if neighbors is not None else h.neighbors_od
     seen: Set[int] = set(int(s) for s in seeds)
     stack = list(seen)
     while stack:
         e = stack.pop()
-        nb, _ = h.neighbors_od(e)
+        nb, _ = row(e)
         for e2 in nb:
             e2 = int(e2)
             if e2 not in seen:
@@ -140,17 +150,23 @@ def _splice(new_h: Hypergraph, old_idx: HLIndex, old_to_new: np.ndarray,
             scope: np.ndarray, refresh_vertices: np.ndarray,
             builder: Callable[[Hypergraph], HLIndex],
             minimizer: Optional[Callable[[HLIndex], HLIndex]],
-            identity_map: bool) -> Tuple[HLIndex, np.ndarray]:
+            identity_map: bool,
+            neighbors: Optional[NeighborCSR] = None
+            ) -> Tuple[HLIndex, np.ndarray]:
     """Build the index for the ``scope`` hyperedges of ``new_h`` only and
     splice it over the surviving labels of ``old_idx``.  With
     ``identity_map`` (no deletions: hyperedge ids unshifted) untouched
     vertices share all three label arrays with the old index; rank
     values of out-of-scope hyperedges are preserved by ``splice_rank``,
-    so ``labels_rank`` is shared in both cases.  Returns ``(new_idx,
-    refreshed_vertices)`` — the rows whose label content changed."""
+    so ``labels_rank`` is shared in both cases.  ``neighbors`` (the
+    patched CSR over ``new_h``) is restricted to the scope and handed to
+    the builder, so scope construction never recomputes neighborhoods.
+    Returns ``(new_idx, refreshed_vertices)`` — the rows whose label
+    content changed."""
     if scope.size:
         sub_h, sub_verts = induced_subhypergraph(new_h, scope)
-        sub_idx = builder(sub_h)
+        sub_idx = (builder(sub_h, neighbors=neighbors.induced(scope))
+                   if neighbors is not None else builder(sub_h))
         if minimizer is not None:
             sub_idx = minimizer(sub_idx)
         sub_rank = sub_idx.rank
@@ -232,7 +248,8 @@ def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
                   inserts: Sequence[Iterable[int]] = (),
                   deletes: Sequence[int] = (), *,
                   builder: Callable[[Hypergraph], HLIndex] = build_fast,
-                  minimizer: Optional[Callable[[HLIndex], HLIndex]] = None
+                  minimizer: Optional[Callable[[HLIndex], HLIndex]] = None,
+                  neighbors: Optional[NeighborCSR] = None
                   ) -> Tuple[Hypergraph, HLIndex, UpdateReport]:
     """Apply a batch of hyperedge inserts/deletes and maintain the index.
 
@@ -242,24 +259,34 @@ def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
     everything else is spliced from ``idx``.  ``idx=None`` builds from
     scratch.  The ``UpdateReport`` names the vertex rows whose label
     content changed — the dirty-rows contract snapshot caching consumes.
-    Answers are exactly those of a full rebuild (asserted in
-    tests/test_maintenance.py and tests/test_property.py).
+
+    ``neighbors`` — a ``NeighborCSR`` over ``h``.  It is 1-hop patched to
+    the new graph (``NeighborCSR.updated``), drives the component BFS and
+    the scope builder, and comes back in ``report.neighbors`` so a
+    persistent caller (the sharded engine) pays the full pair pass at
+    most once, at build time.  Answers are exactly those of a full
+    rebuild (asserted in tests/test_maintenance.py and
+    tests/test_property.py).
     """
     new_h, old_to_new, touched = apply_edge_edits(h, inserts, deletes)
+    nbr = (neighbors.updated(new_h, old_to_new, touched)
+           if neighbors is not None else None)
 
     def rebuilt(scope_size: int) -> Tuple[Hypergraph, HLIndex, UpdateReport]:
-        new_idx = builder(new_h)
+        new_idx = (builder(new_h, neighbors=nbr) if nbr is not None
+                   else builder(new_h))
         if minimizer is not None:
             new_idx = minimizer(new_idx)
         new_idx.stats["maintenance_scope"] = scope_size
         new_idx.stats["maintenance_subgraph_m"] = int(new_h.m)
         return new_h, new_idx, UpdateReport(
             scope=scope_size, refreshed_vertices=np.arange(new_h.n),
-            full_rebuild=True)
+            full_rebuild=True, neighbors=nbr)
 
     if idx is None:
         return rebuilt(int(new_h.m))
-    affected = component_of(new_h, touched) if touched.size else set()
+    affected = (component_of(new_h, touched, neighbors=nbr)
+                if touched.size else set())
     scope = np.fromiter(sorted(affected), np.int64, len(affected))
     # vertices of deleted hyperedges may have lost their last hyperedge
     # (degree 0 in new_h) without being incident to any in-scope edge —
@@ -274,10 +301,11 @@ def apply_updates(h: Hypergraph, idx: Optional[HLIndex],
         return rebuilt(int(scope.size))
     new_idx, refreshed = _splice(new_h, idx, old_to_new, scope,
                                  refresh_extra, builder, minimizer,
-                                 identity_map=not len(deletes))
+                                 identity_map=not len(deletes),
+                                 neighbors=nbr)
     return new_h, new_idx, UpdateReport(scope=int(scope.size),
                                         refreshed_vertices=refreshed,
-                                        full_rebuild=False)
+                                        full_rebuild=False, neighbors=nbr)
 
 
 def insert_hyperedge(h: Hypergraph, idx: HLIndex,

@@ -20,7 +20,12 @@ slot is replaced by a set of version-keyed, mesh-resident replicas:
   ``to_mesh(base=, dirty_rows=, donate_base=True)`` contract: N
   replicas cost N row-scatters of the touched rows, not N full label
   transfers.  All replicas therefore hold byte-identical label tensors
-  at every version — the churn test asserts exactly that.
+  at every version — the churn test asserts exactly that.  Every
+  scoped-update backend reports true dirty rows — including ``sharded``
+  in both regimes since its maintenance went scoped — so full re-lands
+  happen only at first landing or after a genuine whole-index rebuild;
+  a zero-row delta (version bump with no content change) re-keys the
+  resident copies without touching the devices.
 * **Round-robin serving** — each micro-batch is answered off the next
   replica in rotation (per-replica batch counters make the spread
   observable).  The version-keyed swap discipline is unchanged: all
@@ -134,6 +139,17 @@ class ReplicaGroup(ReachabilityService):
         self._stats.rows_full += int(eng.h.n)
         n_dirty = 0 if dirty is None else int(np.asarray(dirty).size)
         for replica in self.replicas:
+            if (replica.snap is not None and dirty is not None
+                    and n_dirty == 0
+                    and tuple(replica.snap.ranks.shape)
+                    == tuple(host.ranks.shape)):
+                # zero-row delta (e.g. an empty update batch): the copy
+                # is already byte-identical — re-key it to the new
+                # version without touching the devices at all
+                replica.snap = dataclasses.replace(replica.snap,
+                                                   version=host.version)
+                replica.kernel_view = None
+                continue
             base = replica.snap if (replica.snap is not None
                                     and dirty is not None) else None
             snap = host.to_mesh(self.mesh, self.axes, base=base,

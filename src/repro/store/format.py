@@ -299,20 +299,31 @@ def save_index(path, engine, *, neighbors: Optional[NeighborCSR] = None) -> Dict
             meta["payload"] = "labels"
             meta["stats"] = _jsonable_stats(engine._idx.stats)
             segments += _hlindex_segments(engine._idx)
+            if neighbors is None:
+                # persist the engine's own neighbor index by default, so
+                # a restarted engine resumes 1-hop-patched scoped updates
+                # without re-running the pair pass
+                neighbors = engine._nbr
         elif engine._w_star is not None:
-            # gather and trim the mesh padding: the saved W* is
-            # mesh-independent, re-padded for whatever mesh loads it
+            # gather in slot order and trim the mesh padding: the saved
+            # W* is mesh- and slot-layout-independent (edge-id order),
+            # re-padded for whatever mesh loads it
             meta["payload"] = "closure"
             w = np.asarray(engine._w_star)
-            segments.append(("w_star", w[:engine._m_true, :engine._m_true]))
+            segments.append(
+                ("w_star", np.ascontiguousarray(
+                    w[np.ix_(engine._slot_of, engine._slot_of)])))
         else:
             # snapshot() freed the closure; the resident snapshot IS the
-            # serving structure now, so persist exactly it
+            # serving structure now, so persist exactly it — plus the
+            # slot map, which scoped updates on the restored engine need
+            # to patch the right snapshot columns
             meta["payload"] = "snapshot"
             snap = engine.snapshot()
             segments += [("snap.ranks", np.asarray(snap.ranks)),
                          ("snap.svals", np.asarray(snap.svals)),
-                         ("snap.lengths", np.asarray(snap.lengths))]
+                         ("snap.lengths", np.asarray(snap.lengths)),
+                         ("snap.slots", np.asarray(engine._slot_of))]
 
     if neighbors is not None:
         segments += [("nbr.ptr", neighbors.ptr), ("nbr.idx", neighbors.idx),
@@ -378,9 +389,11 @@ def _load_sharded(h: Hypergraph, manifest: Dict, seg: Dict[str, np.ndarray],
     if payload == "labels":
         idx = _load_hlindex(h, manifest, seg)
         minimizer = minimize if opts.get("minimize_labels") else None
+        nbr = (NeighborCSR(seg["nbr.ptr"], seg["nbr.idx"], seg["nbr.od"])
+               if "nbr.ptr" in seg else None)
         eng = ShardedEngine(h, mesh, axes, schedule, None, h.m, rounds,
                             idx=idx, minimizer=minimizer, workers=workers,
-                            num_shards=num_shards)
+                            num_shards=num_shards, neighbors=nbr)
     elif payload == "closure":
         # re-pad for the loading mesh (zeros are the (max, min)
         # annihilator, so padding is invariant under the closure) and
@@ -401,6 +414,11 @@ def _load_sharded(h: Hypergraph, manifest: Dict, seg: Dict[str, np.ndarray],
         if int(mesh.devices.size) > 1 and snap.ranks.size:
             snap = snap.to_mesh(mesh, axes)
         eng._snap = snap
+        # restore the slot layout so scoped updates keep patching the
+        # right columns; the padded width is the loaded snapshot's
+        eng._m_padded = int(snap.ranks.shape[1])
+        if "snap.slots" in seg:
+            eng._slot_of = np.asarray(seg["snap.slots"], np.int64)
     else:
         raise CorruptStore(f"unknown sharded payload {payload!r}")
     eng.version = version

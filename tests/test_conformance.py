@@ -49,7 +49,7 @@ EXPECTED_SNAPSHOT = {
 EXPECTED_UPDATE = {
     "hl-index": "scoped", "hl-index-basic": "scoped",
     "online": "incremental", "frontier": "incremental",
-    "closure": "rebuild", "sharded": "rebuild",
+    "closure": "rebuild", "sharded": "scoped",
     "ete": "unsupported", "threshold": "unsupported",
     "mst-oracle": "unsupported",
 }

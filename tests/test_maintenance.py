@@ -5,8 +5,8 @@ import pytest
 
 from repro.core import (random_hypergraph, build_fast, minimize, mr_query,
                         mr_oracle_dense, insert_hyperedge, delete_hyperedge,
-                        apply_updates, from_edge_lists,
-                        planted_chain_hypergraph)
+                        apply_updates, apply_edge_edits, from_edge_lists,
+                        neighbor_csr, planted_chain_hypergraph)
 
 
 def _assert_matches_oracle(idx, h):
@@ -142,3 +142,65 @@ def test_insert_merging_components_invalidates_both():
     h2, idx2 = insert_hyperedge(h, idx, [u0, u1])
     assert idx2.stats["maintenance_scope"] == h2.m   # everything merged
     _assert_matches_oracle(idx2, h2)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_neighbor_csr_patch_matches_fresh(seed):
+    # 1-hop CSR patching (satellite of the scoped-sharded PR): reusing
+    # untouched rows through an edit must be byte-identical to paying
+    # the full O(sum d^2) pair pass on the edited graph
+    rng = np.random.default_rng(100 + seed)
+    h = random_hypergraph(18, 14, seed=seed)
+    csr = neighbor_csr(h)
+    for _ in range(4):
+        ins, dels = [], []
+        if h.m > 2 and rng.random() < 0.6:
+            dels = list(rng.choice(h.m, size=int(rng.integers(1, 3)),
+                                   replace=False))
+        if rng.random() < 0.8:
+            size = int(rng.integers(2, 5))
+            ins.append(rng.choice(h.n, size=min(size, h.n),
+                                  replace=False))
+        h2, old_to_new, touched = apply_edge_edits(h, inserts=ins,
+                                                   deletes=dels)
+        patched = csr.updated(h2, old_to_new, touched)
+        fresh = neighbor_csr(h2)
+        np.testing.assert_array_equal(patched.ptr, fresh.ptr)
+        np.testing.assert_array_equal(patched.idx, fresh.idx)
+        np.testing.assert_array_equal(patched.od, fresh.od)
+        h, csr = h2, patched
+
+
+def test_neighbor_csr_patch_to_empty_and_back():
+    h = from_edge_lists([[0, 1], [1, 2]], n=3)
+    csr = neighbor_csr(h)
+    h2, old_to_new, touched = apply_edge_edits(h, deletes=[0, 1])
+    csr2 = csr.updated(h2, old_to_new, touched)
+    fresh2 = neighbor_csr(h2)
+    np.testing.assert_array_equal(csr2.ptr, fresh2.ptr)
+    h3, old_to_new, touched = apply_edge_edits(h2, inserts=[[0, 1, 2]])
+    csr3 = csr2.updated(h3, old_to_new, touched)
+    fresh3 = neighbor_csr(h3)
+    np.testing.assert_array_equal(csr3.ptr, fresh3.ptr)
+    np.testing.assert_array_equal(csr3.idx, fresh3.idx)
+    np.testing.assert_array_equal(csr3.od, fresh3.od)
+
+
+def test_apply_updates_threads_neighbor_csr():
+    # apply_updates(neighbors=) must hand back a patched CSR equal to a
+    # fresh one, and answers stay identical to the no-CSR path
+    h = random_hypergraph(16, 12, seed=5)
+    idx = build_fast(h)
+    nbr = neighbor_csr(h)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        ins = [rng.choice(h.n, size=3, replace=False)]
+        dels = [int(rng.integers(h.m))] if h.m > 1 else []
+        h, idx, report = apply_updates(h, idx, inserts=ins, deletes=dels,
+                                       neighbors=nbr)
+        assert report.neighbors is not None
+        nbr = report.neighbors
+        fresh = neighbor_csr(h)
+        np.testing.assert_array_equal(nbr.ptr, fresh.ptr)
+        np.testing.assert_array_equal(nbr.idx, fresh.idx)
+        _assert_matches_oracle(idx, h)

@@ -1,0 +1,66 @@
+"""Hypothesis edit-script property: scoped sharded maintenance must be
+byte-identical to a fresh rebuild after every step, in both regimes.
+Gated like tests/test_property.py — skipped wholesale without
+hypothesis."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st
+
+from repro.api import build_engine
+from repro.core import MSTOracle, apply_edge_edits, from_edge_lists
+
+
+def _assert_matches_fresh(eng, h, *, labels):
+    fresh = build_engine(h, "sharded", build_labels=labels)
+    mst = MSTOracle(h)
+    if h.n == 0:
+        return
+    us, vs = np.meshgrid(np.arange(h.n), np.arange(h.n))
+    us, vs = us.ravel(), vs.ravel()
+    got = np.asarray(eng.mr_batch(us, vs)).astype(np.int64)
+    ref = np.asarray(fresh.mr_batch(us, vs)).astype(np.int64)
+    np.testing.assert_array_equal(got, ref)
+    want = np.array([mst.mr(int(u), int(v)) for u, v in zip(us, vs)],
+                    np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+@st.composite
+def _hypergraphs(draw, max_v=12, max_e=8):
+    n = draw(st.integers(3, max_v))
+    m = draw(st.integers(1, max_e))
+    edges = []
+    for _ in range(m):
+        size = draw(st.integers(1, min(5, n)))
+        edges.append(draw(st.lists(st.integers(0, n - 1), min_size=size,
+                                   max_size=size, unique=True)))
+    return from_edge_lists(edges, n=n)
+
+
+@st.composite
+def _edit_scripts(draw, steps=3):
+    script = []
+    for _ in range(draw(st.integers(1, steps))):
+        n_ins = draw(st.integers(0, 2))
+        inserts = [draw(st.lists(st.integers(0, 13), min_size=2,
+                                 max_size=4, unique=True))
+                   for _ in range(n_ins)]
+        deletes = draw(st.lists(st.floats(0, 1), min_size=0, max_size=2))
+        script.append((inserts, deletes))
+    return script
+
+
+@pytest.mark.parametrize("labels", [False, True],
+                         ids=["closure", "labels"])
+@settings(max_examples=5, deadline=None)
+@given(_hypergraphs(), _edit_scripts())
+def test_scoped_equals_fresh_rebuild_every_step(labels, h, script):
+    eng = build_engine(h, "sharded", build_labels=labels)
+    for inserts, delete_fracs in script:
+        deletes = sorted({int(f * (h.m - 1)) for f in delete_fracs
+                          if h.m > 0})
+        eng.update(inserts=inserts, deletes=deletes)
+        h, _, _ = apply_edge_edits(h, inserts, deletes)
+        _assert_matches_fresh(eng, h, labels=labels)
